@@ -1,0 +1,41 @@
+"""Shared benchmark helpers.  Multi-device benchmarks run in subprocesses
+with XLA_FLAGS set (the parent process keeps 1 device)."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time per call in microseconds (fn must block)."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def run_subprocess_bench(module: str, n_devices: int = 8,
+                         timeout: int = 1800) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    p = subprocess.run([sys.executable, "-m", module], env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    if p.returncode != 0:
+        sys.stderr.write(p.stderr[-3000:])
+        return f"{module},nan,SUBPROCESS_FAILED\n"
+    return p.stdout

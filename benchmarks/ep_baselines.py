@@ -1,0 +1,50 @@
+"""Baseline EP implementations for benchmarking (paper §5.1):
+
+- ``nccl_bulk``: coarse-grained collective — all-gather every token to every
+  EP shard, compute local experts on everything, psum combine.  No
+  token-level dispatch, no dedup (the NCCL/RCCL path).
+- ``pplx_packed``: per-choice capacity-packed single a2a (token packing on
+  device, no dedup, no hierarchical reduce) — our LL mode IS this shape, so
+  LL doubles as the PPLX-like baseline with per-token granularity.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.ep import EPSpec
+from repro.kernels.ref import grouped_swiglu_ref
+
+
+def moe_nccl_bulk(spec: EPSpec, x, top_idx, top_w, wg, wu, wd):
+    """Runs inside shard_map.  x: (T_l, D) local tokens."""
+    ax = spec.flat_axis()
+    xs = lax.all_gather(x, ax, axis=0, tiled=True)          # (T_g, D)
+    ti = lax.all_gather(top_idx, ax, axis=0, tiled=True)
+    tw = lax.all_gather(top_w, ax, axis=0, tiled=True)
+    eps = spec.experts_per_shard
+    idx0 = _flat_index(spec)
+    # local experts applied to ALL tokens, masked by routing
+    y = jnp.zeros((xs.shape[0], x.shape[1]), jnp.float32)
+    for el in range(eps):
+        e = idx0 * eps + el
+        w_e = jnp.where(ti == e[None, None], tw, 0.0).sum(-1)   # (T_g,)
+        o = grouped_swiglu_ref(xs[None], wg[el][None], wu[el][None],
+                               wd[el][None])[0]
+        y = y + o.astype(jnp.float32) * w_e[:, None]
+    y = lax.psum(y, ax)
+    T_l = x.shape[0]
+    shard = _flat_shard_id(spec)
+    return lax.dynamic_slice_in_dim(y, shard * T_l, T_l, axis=0).astype(x.dtype)
+
+
+def _flat_shard_id(spec: EPSpec):
+    idx = jnp.int32(0)
+    for a in spec.axes:
+        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+    return idx
+
+
+def _flat_index(spec: EPSpec):
+    return _flat_shard_id(spec)

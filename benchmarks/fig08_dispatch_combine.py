@@ -1,0 +1,92 @@
+"""Paper Figs. 8/9/10/12 + Fig. 4: dispatch+combine latency vs #tokens for
+LL / HT / nccl_bulk baselines on an 8-device CPU mesh (EP8), plus modeled
+bytes-on-wire (derived column) showing dedup + hierarchical-reduce savings.
+
+Run via ``python -m benchmarks.run`` (it spawns this with 8 devices).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import AxisType, PartitionSpec as P
+
+from benchmarks.common import emit, timeit
+from benchmarks.ep_baselines import moe_nccl_bulk
+from repro.core.ep import EPSpec, dispatch_combine_ht, dispatch_combine_ll
+from repro.kernels.ref import grouped_swiglu_ref
+
+E, K, D, F = 32, 6, 256, 128
+
+
+def build(mesh, axes, mode, n_tokens_global, chunks=1):
+    sizes = tuple(mesh.shape[a] for a in axes)
+    spec = EPSpec(axes=axes, sizes=sizes, n_experts=E, top_k=K,
+                  capacity_factor=2.0, chunks=chunks, dtype=jnp.bfloat16)
+    ep_p = axes if len(axes) > 1 else axes[0]
+
+    def island(x, ti, tw, wg, wu, wd):
+        fn = {"ll": dispatch_combine_ll, "ht": dispatch_combine_ht}.get(mode)
+        if fn is None:
+            return moe_nccl_bulk(spec, x, ti, tw, wg, wu, wd)
+        return fn(spec, x, ti, tw,
+                  lambda t: grouped_swiglu_ref(t, wg, wu, wd)).out
+
+    f = jax.jit(jax.shard_map(
+        island, mesh=mesh,
+        in_specs=(P(axes), P(axes), P(axes), P(ep_p, None, None),
+                  P(ep_p, None, None), P(ep_p, None, None)),
+        out_specs=P(axes), check_vma=False))
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (n_tokens_global, D), jnp.bfloat16)
+    ti = jax.random.randint(ks[1], (n_tokens_global, K), 0, E).astype(jnp.int32)
+    tw = jax.nn.softmax(jax.random.normal(ks[2], (n_tokens_global, K)), -1)
+    tw = tw.astype(jnp.bfloat16)
+    wg = (jax.random.normal(ks[3], (E, D, F)) * 0.1).astype(jnp.bfloat16)
+    wu = (jax.random.normal(ks[4], (E, D, F)) * 0.1).astype(jnp.bfloat16)
+    wd = (jax.random.normal(ks[5], (E, F, D)) * 0.1).astype(jnp.bfloat16)
+    args = (x, ti, tw, wg, wu, wd)
+    return lambda: jax.block_until_ready(f(*args))
+
+
+def wire_bytes_model(n_tokens, mode, P_ep=8, pods=2):
+    """Modeled inter-shard payload bytes (dispatch+combine), global."""
+    tok = D * 2
+    if mode == "nccl":
+        return n_tokens * tok * (P_ep - 1) * 2          # all-gather + psum
+    if mode == "ll":
+        return n_tokens * K * tok * 2                   # per choice, both ways
+    # ht: dedup per shard group + one combined return per (token, group)
+    frac = 1.0 - (1.0 - 1.0 / P_ep) ** K
+    groups_hit = P_ep * frac
+    return int(n_tokens * groups_hit * tok * 2)
+
+
+def main():
+    mesh = jax.make_mesh((8,), ("model",), axis_types=(AxisType.Auto,))
+    for n in (128, 512, 2048, 8192):
+        for mode in ("ll", "ht", "nccl"):
+            try:
+                fn = build(mesh, ("model",), mode, n,
+                           chunks=2 if mode == "ht" and n >= 512 else 1)
+                us = timeit(fn, warmup=2, iters=5)
+            except Exception as e:  # noqa: BLE001
+                emit(f"fig08_dispatch_combine/{mode}/tokens={n}", float("nan"),
+                     f"error:{type(e).__name__}")
+                continue
+            wb = wire_bytes_model(n, mode)
+            emit(f"fig08_dispatch_combine/{mode}/tokens={n}", us,
+                 f"wire_bytes={wb}")
+    # two-level (pod x model) HT: the hierarchical/dedup path (Fig. 12 analog)
+    mesh2 = jax.make_mesh((2, 4), ("pod", "model"),
+                          axis_types=(AxisType.Auto,) * 2)
+    for n in (512, 2048):
+        fn = build(mesh2, ("pod", "model"), "ht", n, chunks=2)
+        us = timeit(fn, warmup=2, iters=5)
+        emit(f"fig08_dispatch_combine/ht2level/tokens={n}", us,
+             "hierarchical+dedup")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Fig. 14: training throughput (tokens/s + achieved FLOP/s) for the
+HT EP path vs the dense bulk baseline on a reduced MoE model, 8 devices."""
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_config, reduced_config
+from repro.data.pipeline import DataConfig, synth_batch
+from repro.distributed.sharding import make_dist_ctx
+from repro.launch.mesh import make_bench_mesh
+from repro.training.train_loop import HParams, init_state, make_train_step
+
+
+def run(moe_mode: str, steps: int = 4, B: int = 16, S: int = 128):
+    cfg = reduced_config(get_config("moonshot_v1_16b_a3b"), n_layers=2,
+                         d_model=128, n_experts=8, vocab=1024)
+    mesh = make_bench_mesh(len(jax.devices()), model=4)
+    dist = make_dist_ctx(cfg, mesh)
+    hp = HParams(moe_mode=moe_mode, loss_chunk=S)
+    state = init_state(cfg, jax.random.PRNGKey(0), dist=dist)
+    step = make_train_step(cfg, hp, dist)
+    dc = DataConfig(vocab_size=cfg.vocab_size, batch=B, seq_len=S, seed=0)
+    state, m = step(state, synth_batch(dc, 0))       # compile
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for i in range(1, steps + 1):
+        state, m = step(state, synth_batch(dc, i))
+    jax.block_until_ready(m["loss"])
+    dt = time.perf_counter() - t0
+    toks = B * S * steps
+    flops = 6 * cfg.active_param_count() * toks
+    return toks / dt, flops / dt
+
+
+def main():
+    tput_ht, fl_ht = run("ht")
+    tput_ref, fl_ref = run("ref")
+    emit("fig14_training/uccl_ep_ht", 1e6 / tput_ht,
+         f"tok_per_s={tput_ht:.0f} tflops={fl_ht/1e12:.3f} "
+         f"vs_dense={tput_ht / tput_ref:.2f}x")
+    emit("fig14_training/dense_baseline", 1e6 / tput_ref,
+         f"tok_per_s={tput_ref:.0f} tflops={fl_ref/1e12:.3f}")
+
+
+if __name__ == "__main__":
+    main()

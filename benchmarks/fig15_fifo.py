@@ -1,0 +1,64 @@
+"""Paper Fig. 15: FIFO channel stress — throughput (Mops) and latency vs
+offered load, with 1..8 channels and matching consumer threads (16-byte
+TransferCmds, exactly the paper's descriptor size)."""
+import threading
+import time
+
+from benchmarks.common import emit
+from repro.core.transport.fifo import FifoChannel, Op, TransferCmd
+
+N_CMDS = 50_000
+
+
+def bench(n_channels: int) -> tuple[float, float]:
+    chans = [FifoChannel(k_max_inflight=256) for _ in range(n_channels)]
+    done = threading.Event()
+    consumed = [0] * n_channels
+
+    def consumer(i):
+        ch = chans[i]
+        while not done.is_set() or ch.inflight:
+            got = ch.pop()
+            if got is None:
+                time.sleep(1e-6)
+                continue
+            consumed[i] += 1
+
+    threads = [threading.Thread(target=consumer, args=(i,))
+               for i in range(n_channels)]
+    for t in threads:
+        t.start()
+    cmd = TransferCmd(Op.WRITE, 1, 0, 0, 0, 7168, 0)
+    per = N_CMDS // n_channels
+    t0 = time.perf_counter()
+    for i in range(per):
+        for c in range(n_channels):
+            chans[c].push(cmd)
+    while sum(consumed) < per * n_channels:
+        time.sleep(1e-4)
+    dt = time.perf_counter() - t0
+    done.set()
+    for t in threads:
+        t.join(timeout=1)
+    mops = per * n_channels / dt / 1e6
+    us_per_cmd = dt * 1e6 / (per * n_channels)
+    return mops, us_per_cmd
+
+
+def main():
+    for n_channels in (1, 2, 4, 8):
+        mops, us = bench(n_channels)
+        emit(f"fig15_fifo/channels={n_channels}", us, f"mops={mops:.3f}")
+    # single-channel latency: push->pop round trip
+    ch = FifoChannel(64)
+    cmd = TransferCmd(Op.WRITE, 0, 0, 0, 0, 16, 0)
+    t0 = time.perf_counter()
+    for _ in range(10_000):
+        ch.push(cmd)
+        ch.pop()
+    lat = (time.perf_counter() - t0) * 1e6 / 10_000
+    emit("fig15_fifo/roundtrip_latency", lat, "single-thread")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Paper Fig. 16: sensitivity to EP degree (2/4/8) for LL and HT dispatch +
+combine on CPU-device meshes.  Run via benchmarks.run (8 devices)."""
+import jax
+from jax.sharding import AxisType
+
+from benchmarks.common import emit, timeit
+from benchmarks.fig08_dispatch_combine import build
+
+
+def main():
+    for ep in (2, 4, 8):
+        mesh = jax.make_mesh((ep,), ("model",), axis_types=(AxisType.Auto,))
+        for mode in ("ll", "ht"):
+            fn = build(mesh, ("model",), mode, 2048,
+                       chunks=2 if mode == "ht" else 1)
+            us = timeit(fn, warmup=2, iters=5)
+            emit(f"fig16_ep_sweep/{mode}/ep={ep}", us, "tokens=2048")
+
+
+if __name__ == "__main__":
+    main()

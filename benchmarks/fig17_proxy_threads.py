@@ -1,0 +1,46 @@
+"""Paper Fig. 17: sensitivity to #proxy threads.  The full LL EP protocol on
+the transport substrate with 1 (CPU-assisted-IBGDA baseline), 2 and 4 proxy
+threads per rank."""
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.transport import EPWorld, NetConfig
+
+
+def run(n_threads: int) -> float:
+    rng = np.random.default_rng(0)
+    R, E, K, D, F, Tl = 4, 8, 4, 64, 64, 64
+    x = rng.standard_normal((R, Tl, D)).astype(np.float32)
+    ti = rng.integers(0, E, size=(R, Tl, K)).astype(np.int32)
+    tw = rng.random((R, Tl, K)).astype(np.float32)
+    tw /= tw.sum(-1, keepdims=True)
+    wg = (rng.standard_normal((E, D, F)) * 0.1).astype(np.float32)
+    wu = (rng.standard_normal((E, D, F)) * 0.1).astype(np.float32)
+    wd = (rng.standard_normal((E, F, D)) * 0.1).astype(np.float32)
+    w = EPWorld(n_ranks=R, n_experts=E, top_k=K, d=D, f=F, capacity=Tl * K,
+                net_cfg=NetConfig(mode="srd", seed=0), n_threads=n_threads,
+                n_channels=8, use_threads=True)
+    t0 = time.perf_counter()
+    out = w.run(x, ti, tw, wg, wu, wd)
+    dt = (time.perf_counter() - t0) * 1e6
+    for p in w.proxies:
+        p.stop()
+    ref = EPWorld.oracle(x, ti, tw, wg, wu, wd)
+    assert np.allclose(out, ref, rtol=1e-4, atol=1e-5)
+    return dt
+
+
+def main():
+    base = None
+    for n in (1, 2, 4):
+        us = run(n)
+        if base is None:
+            base = us
+        emit(f"fig17_proxy_threads/threads={n}", us,
+             f"speedup_vs_1thread={base / us:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

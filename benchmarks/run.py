@@ -1,0 +1,42 @@
+"""Benchmark harness (assignment deliverable d): one entry per paper figure.
+Prints ``name,us_per_call,derived`` CSV.  Host-only benchmarks run in-process
+(1 device); device benchmarks run in subprocesses with 8 fake CPU devices.
+
+  PYTHONPATH=src python -m benchmarks.run [--only figXX]
+"""
+import argparse
+import sys
+
+from benchmarks.common import run_subprocess_bench
+
+HOST_BENCHES = [
+    "benchmarks.fig04_token_vs_bulk",
+    "benchmarks.fig07_semantics_side",
+    "benchmarks.fig15_fifo",
+    "benchmarks.fig17_proxy_threads",
+]
+DEVICE_BENCHES = [
+    "benchmarks.fig08_dispatch_combine",
+    "benchmarks.fig16_ep_sweep",
+    "benchmarks.fig13_serving",
+    "benchmarks.fig14_training",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for mod in HOST_BENCHES + DEVICE_BENCHES:
+        if args.only and args.only not in mod:
+            continue
+        # every bench runs in a subprocess so the parent never initialises
+        # jax with the wrong device count
+        n_dev = 8 if mod in DEVICE_BENCHES else 1
+        sys.stdout.write(run_subprocess_bench(mod, n_devices=n_dev))
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

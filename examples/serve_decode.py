@@ -1,0 +1,55 @@
+"""Batched serving example: greedy decode with LL-mode EP dispatch and a
+sharded KV cache (split-sequence decode attention) on a local mesh.
+
+  python examples/serve_decode.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.distributed.sharding import make_dist_ctx
+from repro.launch.mesh import make_bench_mesh
+from repro.models import model_zoo as Z
+
+
+def main():
+    cfg = reduced_config(get_config("qwen2_moe_a2_7b"), n_layers=2,
+                         d_model=128, vocab=2048)
+    mesh = make_bench_mesh(len(jax.devices()), model=4)
+    dist = make_dist_ctx(cfg, mesh)
+    key = jax.random.PRNGKey(0)
+    params = Z.init_params(cfg, key)
+    B, prompt_len, gen = 8, 16, 24
+    max_len = prompt_len + gen
+    cache = Z.init_cache(cfg, B, max_len)
+    prompts = jax.random.randint(key, (B, prompt_len), 0, cfg.vocab_size)
+
+    step = jax.jit(partial(Z.decode_step, cfg, dist=dist, moe_mode="ll"),
+                   donate_argnums=(1,))
+    tok = prompts[:, :1]
+    t0 = time.perf_counter()
+    generated = []
+    for t in range(max_len - 1):
+        logits, cache = step(params, cache, tok, jnp.int32(t))
+        if t + 1 < prompt_len:
+            tok = prompts[:, t + 1:t + 2]
+        else:
+            tok = jnp.argmax(logits[:, :cfg.vocab_size], -1)[:, None].astype(jnp.int32)
+            generated.append(int(tok[0, 0]))
+    dt = time.perf_counter() - t0
+    n = B * gen
+    print(f"[serve] {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s) on "
+          f"{len(jax.devices())} devices; sample continuation: {generated[:10]}")
+    assert all(jnp.isfinite(logits).all() for _ in [0])
+    print("[serve] OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""End-to-end driver: train a ~100M-param MoE LM for a few hundred steps on
+an 8-device CPU mesh with the HT (dedup + hierarchical) EP path, checkpoints,
+watchdog, and a mid-run injected failure that recovers from the checkpoint.
+
+  python examples/train_moe_e2e.py [--steps 200]
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config, reduced_config
+from functools import partial
+
+from repro.data.pipeline import DataConfig, synth_batch
+from repro.distributed.fault import FailureInjector
+from repro.distributed.sharding import make_dist_ctx
+from repro.launch.mesh import make_bench_mesh
+from repro.training.train_loop import HParams, Watchdog, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    # ~100M params: 4 layers, d=512, 8 experts of f=1024, vocab 8192
+    base = get_config("moonshot_v1_16b_a3b")
+    cfg = reduced_config(base, n_layers=4, d_model=512, n_experts=8,
+                         vocab=8192)
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, d_expert=1024, top_k=2))
+    n = cfg.param_count()
+    print(f"[e2e] model: {n/1e6:.1f}M params "
+          f"({cfg.active_param_count()/1e6:.1f}M active), "
+          f"{cfg.moe.n_experts} experts top-{cfg.moe.top_k}")
+
+    mesh = make_bench_mesh(len(jax.devices()), model=4)
+    dist = make_dist_ctx(cfg, mesh)
+    print(f"[e2e] mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}, "
+          f"EP axes: {dist.ep_axes}")
+
+    hp = HParams(peak_lr=1e-3, total_steps=args.steps, warmup=20,
+                 moe_mode="ht", moe_chunks=1, loss_chunk=args.seq)
+    dc = DataConfig(vocab_size=cfg.vocab_size, batch=args.batch,
+                    seq_len=args.seq, seed=0)
+    with tempfile.TemporaryDirectory() as td:
+        ckpt = Checkpointer(td, keep=2)
+        injector = FailureInjector(at_steps=(args.steps // 2,))
+        state, hist = train_loop(
+            cfg, hp, dist, partial(synth_batch, dc), steps=args.steps,
+            checkpointer=ckpt, ckpt_every=25, log_every=20,
+            watchdog=Watchdog(), fail_injector=injector)
+    losses = [h["loss"] for h in hist]
+    print(f"[e2e] loss: first={losses[0]:.4f} last={losses[-1]:.4f}")
+    assert losses[-1] < losses[0] - 0.3, "loss did not decrease"
+    print("[e2e] OK: loss decreased and failure recovery exercised")
+
+
+if __name__ == "__main__":
+    main()

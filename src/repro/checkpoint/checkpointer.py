@@ -1,0 +1,122 @@
+"""Fault-tolerant checkpointing: atomic (write-temp + fsync + rename) npz
+checkpoints of the full TrainState, with retention, resume, and corruption
+fallback — a node can die mid-write and the previous checkpoint stays valid.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", None) or getattr(k, "name", None)
+                or getattr(k, "idx", None) or k) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_like(template, flat: dict[str, np.ndarray]):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(
+            str(getattr(k, "key", None) or getattr(k, "name", None)
+                or getattr(k, "idx", None) or k) for k in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class Checkpointer:
+    """Directory layout: <dir>/step_000123/state.npz + MANIFEST.json.
+    The manifest is written last; a checkpoint without a valid manifest is
+    treated as garbage (crash mid-write) and ignored/cleaned."""
+
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    # ------------------------------------------------------------- save --
+    def save(self, state, step: int, extra: Optional[dict] = None) -> Path:
+        final = self.dir / f"step_{step:09d}"
+        tmp = Path(tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=self.dir))
+        try:
+            flat = _flatten_with_paths(state)
+            with open(tmp / "state.npz", "wb") as f:
+                np.savez(f, **flat)
+                f.flush()
+                os.fsync(f.fileno())
+            manifest = {"step": step, "time": time.time(),
+                        "n_leaves": len(flat), "extra": extra or {}}
+            with open(tmp / "MANIFEST.json", "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            if final.exists():
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._retain()
+        return final
+
+    def _retain(self):
+        steps = self.list_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:09d}", ignore_errors=True)
+        # clean stale temp dirs from crashed writers
+        for p in self.dir.glob(".tmp_ckpt_*"):
+            shutil.rmtree(p, ignore_errors=True)
+
+    # ---------------------------------------------------------- restore --
+    def list_steps(self) -> list[int]:
+        out = []
+        for p in sorted(self.dir.glob("step_*")):
+            if self._valid(p):
+                out.append(int(p.name.split("_")[1]))
+        return out
+
+    def _valid(self, p: Path) -> bool:
+        mf = p / "MANIFEST.json"
+        if not mf.exists() or not (p / "state.npz").exists():
+            return False
+        try:
+            json.load(open(mf))
+            return True
+        except Exception:
+            return False
+
+    def restore(self, template, step: int):
+        p = self.dir / f"step_{step:09d}"
+        with np.load(p / "state.npz") as z:
+            flat = {k: z[k] for k in z.files}
+        return _unflatten_like(template, flat)
+
+    def restore_latest(self, template) -> Optional[tuple[Any, int]]:
+        """Returns (state, step) from the newest VALID checkpoint, walking
+        backwards past corrupted ones."""
+        for step in reversed(self.list_steps()):
+            try:
+                return self.restore(template, step), step
+            except Exception:
+                continue
+        return None

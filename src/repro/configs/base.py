@@ -1,0 +1,246 @@
+"""Config system for repro: model/arch configs, input shapes, run configs.
+
+Every assigned architecture gets a module in ``repro.configs`` exporting
+``CONFIG: ModelConfig``.  Shapes are the four assigned LM shape cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts settings for one model."""
+
+    n_experts: int = 0                 # routed experts
+    top_k: int = 0
+    n_shared_experts: int = 0          # always-on shared experts (qwen2-moe style)
+    d_expert: int = 0                  # per-expert FFN hidden dim
+    d_shared: int = 0                  # fused shared-expert hidden dim
+    moe_every: int = 1                 # MoE layer every Nth layer (1 = all)
+    capacity_factor: float = 2.0       # train/prefill capacity factor
+    ll_capacity_factor: float = 4.0    # decode (LL) capacity factor
+    router_aux_free_bias: bool = True  # DeepSeek aux-loss-free balancing bias
+    aux_loss_weight: float = 1e-2      # Switch-style load-balance loss weight
+
+    @property
+    def enabled(self) -> bool:
+        return self.n_experts > 0
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    """Mamba-1 SSM settings."""
+
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model/16)
+
+    @property
+    def enabled(self) -> bool:
+        return self.d_state > 0
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One assigned architecture.  Field names follow the assignment table."""
+
+    arch_id: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int                      # 0 for attention-free archs
+    n_kv_heads: int = 0
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+    d_ff: int = 0                     # dense FFN hidden (0 for pure-MoE / ssm)
+    vocab_size: int = 32000
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    mamba: MambaConfig = field(default_factory=lambda: MambaConfig(d_state=0))
+    # hybrid (jamba): one attention layer per `attn_every` layers; rest mamba.
+    attn_every: int = 0               # 0 = all layers attention (or none if n_heads==0)
+    attn_offset: int = 0              # index within the period that is attention
+    # modality frontend stub: number of prefix embedding positions fed by
+    # input_specs() ("vlm": patch embeddings, "audio": frame embeddings).
+    frontend_prefix: int = 0
+    source: str = ""                  # provenance note ([hf:...] / [arXiv:...])
+    # numerics / training
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    optimizer: str = "adamw"          # adamw | adafactor (factored 2nd moment)
+    remat: bool = True
+    # sub-quadratic attention available? (pure full-attention archs -> False)
+    subquadratic: bool = False
+
+    # ---- derived ----
+    @property
+    def head_dim_(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.n_heads == 0
+
+    def padded_vocab(self, multiple: int = 256) -> int:
+        return _round_up(self.vocab_size, multiple)
+
+    def padded_experts(self, ep_degree: int) -> int:
+        """Routed experts padded up so EP sharding divides evenly."""
+        if not self.moe.enabled:
+            return 0
+        return _round_up(self.moe.n_experts, ep_degree)
+
+    def is_attn_layer(self, layer_idx: int) -> bool:
+        if self.attention_free:
+            return False
+        if self.attn_every <= 1:
+            return True
+        return layer_idx % self.attn_every == self.attn_offset
+
+    def is_moe_layer(self, layer_idx: int) -> bool:
+        if not self.moe.enabled:
+            return False
+        return layer_idx % self.moe.moe_every == (self.moe.moe_every - 1)
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks), for sanity tests
+        and MODEL_FLOPS in the roofline (6*N*D dense / 6*N_active*D MoE)."""
+        d = self.d_model
+        n = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        for i in range(self.n_layers):
+            n += self._block_params(i)
+        return n
+
+    def active_param_count(self) -> int:
+        """Active-per-token parameters (MoE: top_k + shared experts only)."""
+        d = self.d_model
+        n = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        for i in range(self.n_layers):
+            n += self._block_params(i, active_only=True)
+        return n
+
+    def _block_params(self, i: int, active_only: bool = False) -> int:
+        d = self.d_model
+        n = 0
+        if self.is_attn_layer(i):
+            hd = self.head_dim_
+            q = d * self.n_heads * hd
+            kv = 2 * d * self.n_kv_heads * hd
+            o = self.n_heads * hd * d
+            n += q + kv + o
+            if self.qkv_bias:
+                n += (self.n_heads + 2 * self.n_kv_heads) * hd
+        elif self.mamba.enabled:
+            di = self.mamba.expand * d
+            dtr = self.mamba.dt_rank or -(-d // 16)
+            n += d * di * 2            # in_proj (x and z)
+            n += di * self.mamba.d_conv  # depthwise conv
+            n += di * (dtr + 2 * self.mamba.d_state)  # x_proj
+            n += dtr * di + di         # dt_proj
+            n += di * self.mamba.d_state + di  # A_log, D
+            n += di * d                # out_proj
+        if self.is_moe_layer(i):
+            e = self.moe.top_k if active_only else self.moe.n_experts
+            n += e * 3 * d * self.moe.d_expert
+            if self.moe.d_shared:
+                n += 3 * d * self.moe.d_shared
+            n += d * self.moe.n_experts  # router
+        elif self.d_ff:
+            n += 3 * d * self.d_ff     # SwiGLU
+        n += 2 * d                     # 2 RMSNorms
+        return n
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    """One assigned (input-shape) cell."""
+
+    name: str                 # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                 # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+ARCH_IDS: Sequence[str] = (
+    "moonshot_v1_16b_a3b",
+    "qwen2_moe_a2_7b",
+    "qwen3_1_7b",
+    "phi3_medium_14b",
+    "qwen2_72b",
+    "qwen3_4b",
+    "internvl2_26b",
+    "musicgen_large",
+    "falcon_mamba_7b",
+    "jamba_1_5_large_398b",
+)
+
+# canonical external ids (--arch accepts either form)
+_ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch = _ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(ARCH_IDS)}")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def reduced_config(cfg: ModelConfig, *, n_layers: int = 2, d_model: int = 64,
+                   n_experts: int = 8, vocab: int = 512) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    heads = 0 if cfg.attention_free else 4
+    kv = 0 if cfg.attention_free else (2 if cfg.n_kv_heads < cfg.n_heads else 4)
+    moe = cfg.moe
+    if moe.enabled:
+        moe = dataclasses.replace(
+            moe, n_experts=n_experts, top_k=min(moe.top_k, 2),
+            d_expert=d_model, d_shared=d_model if moe.d_shared else 0)
+    mamba = cfg.mamba
+    # jamba interleave period shrinks to 2 so a 2-layer smoke covers both kinds
+    attn_every = min(cfg.attn_every, 2) if cfg.attn_every else 0
+    return dataclasses.replace(
+        cfg, n_layers=n_layers, d_model=d_model, n_heads=heads, n_kv_heads=kv,
+        head_dim=d_model // heads if heads else 0,
+        d_ff=d_model * 2 if cfg.d_ff else 0, vocab_size=vocab, moe=moe,
+        mamba=mamba, attn_every=attn_every, attn_offset=0,
+        frontend_prefix=min(cfg.frontend_prefix, 4))
+
+
+def cells_for(cfg: ModelConfig) -> list[str]:
+    """Shape cells this arch runs (long_500k only for sub-quadratic archs)."""
+    out = []
+    for name, cell in SHAPES.items():
+        if name == "long_500k" and not cfg.subquadratic:
+            continue  # skip: pure full-attention arch (DESIGN.md §5)
+        out.append(name)
+    return out

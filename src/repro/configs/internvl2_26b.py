@@ -1,0 +1,22 @@
+"""internvl2-26b: InternViT + InternLM2 backbone. [arXiv:2404.16821; hf]
+
+48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92553 (padded to 92672 for
+16-way vocab TP).  VLM: the InternViT frontend is a STUB — input_specs()
+provides 256 precomputed patch embeddings per sample at d_model, prepended to
+the text token stream (assignment rule: backbone only).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="internvl2_26b",
+    family="vlm",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16_384,
+    vocab_size=92_553,
+    rope_theta=1e6,
+    frontend_prefix=256,
+    source="[arXiv:2404.16821; hf]",
+)

@@ -1,0 +1,10 @@
+"""UCCL-EP core: routing, dispatch/combine (LL/HT), transport substrate."""
+from repro.core.ep import (EPSpec, DispatchResult, dispatch_combine_ht,
+                           dispatch_combine_ll, moe_ref)
+from repro.core.moe import moe_apply, moe_init, padded_experts_static
+from repro.core.routing import RouterOut, RouterParams, route, router_init
+
+__all__ = ["EPSpec", "DispatchResult", "dispatch_combine_ht",
+           "dispatch_combine_ll", "moe_ref", "moe_apply", "moe_init",
+           "padded_experts_static", "RouterOut", "RouterParams", "route",
+           "router_init"]

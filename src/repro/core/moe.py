@@ -1,0 +1,144 @@
+"""MoE FFN layer: router + UCCL-EP dispatch/combine + grouped expert SwiGLU
+(+ optional always-on shared experts which bypass dispatch, qwen2-moe style).
+
+The expert-parallel path runs inside one ``shard_map`` island over the full
+mesh; without a mesh (CPU smoke tests) it falls back to the dense oracle.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, _round_up
+from repro.core import ep as ep_mod
+from repro.core.ep import EPSpec, dispatch_combine_ht, dispatch_combine_ll, moe_ref
+from repro.core.routing import RouterParams, route, router_init
+from repro.distributed.sharding import DistCtx
+from repro.kernels import ops as kops
+from repro.models.layers import MLPParams, mlp_init, swiglu
+
+Array = jax.Array
+
+
+def padded_experts_static(cfg: ModelConfig) -> int:
+    """Mesh-independent padded expert count (divisible by EP16 and, when the
+    model has >=32 experts, by EP32) so checkpoints are mesh-portable."""
+    e = cfg.moe.n_experts
+    return _round_up(e, 32) if e >= 32 else _round_up(e, 16)
+
+
+def moe_init(cfg: ModelConfig, key: Array) -> dict:
+    m = cfg.moe
+    e_pad = padded_experts_static(cfg)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    d, f = cfg.d_model, m.d_expert
+    s, so = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    r = router_init(d, e_pad, k1, m.router_aux_free_bias)
+    out = {
+        "router_w": r.w,
+        "w_gate": jax.random.normal(k2, (e_pad, d, f), jnp.float32) * s,
+        "w_up": jax.random.normal(k3, (e_pad, d, f), jnp.float32) * s,
+        "w_down": jax.random.normal(k4, (e_pad, f, d), jnp.float32) * so,
+    }
+    if r.bias is not None:
+        out["router_b"] = r.bias
+    if m.d_shared:
+        out["shared"] = dict(mlp_init(d, m.d_shared, k5)._asdict())
+    return out
+
+
+def _expert_fn(wg, wu, wd):
+    def fn(tokens):  # (E_local, C, D)
+        return kops.grouped_swiglu(tokens, wg, wu, wd)
+    return fn
+
+
+def make_ep_spec(cfg: ModelConfig, dist: DistCtx, *, mode: str,
+                 chunks: int = 1, dtype=jnp.bfloat16) -> EPSpec:
+    sizes = tuple(dist.mesh.shape[a] for a in dist.ep_axes)
+    cf = (cfg.moe.ll_capacity_factor if mode == "ll"
+          else cfg.moe.capacity_factor)
+    return EPSpec(axes=tuple(dist.ep_axes), sizes=sizes,
+                  n_experts=padded_experts_static(cfg), top_k=cfg.moe.top_k,
+                  capacity_factor=cf, chunks=chunks, dtype=dtype)
+
+
+def moe_apply(cfg: ModelConfig, dist: Optional[DistCtx], p: dict, x: Array,
+              *, mode: str = "ht", chunks: int = 1) -> tuple[Array, dict]:
+    """x: (B, S, D) -> (y, aux).  mode: "ht" | "ll" | "ref"."""
+    B, S, D = x.shape
+    mcfg = cfg.moe
+    e_pad = p["w_gate"].shape[0]
+    rparams = RouterParams(w=p["router_w"], bias=p.get("router_b"))
+
+    if dist is None or not dist.ep_axes or mode == "ref":
+        t = x.reshape(-1, D)
+        rout = route(mcfg, rparams, t, mcfg.n_experts)
+        y = moe_ref(t, rout.top_idx, rout.top_w, p["w_gate"], p["w_up"],
+                    p["w_down"])
+        aux = {"aux_loss": rout.aux_loss, "dropped": jnp.float32(0.0),
+               "load": jax.nn.one_hot(rout.top_idx, e_pad).sum((0, 1))}
+        y = y.reshape(B, S, D)
+    else:
+        y, aux = _moe_dist(cfg, dist, rparams, p, x, mode, chunks)
+
+    if mcfg.d_shared and "shared" in p:
+        sh = MLPParams(**{k: p["shared"][k] for k in ("w_gate", "w_up", "w_down")})
+        y = y + swiglu(sh, x)
+    return y, aux
+
+
+def _moe_dist(cfg: ModelConfig, dist: DistCtx, rparams: RouterParams, p: dict,
+              x: Array, mode: str, chunks: int) -> tuple[Array, dict]:
+    mesh = dist.mesh
+    all_axes = tuple(mesh.axis_names)
+    mcfg = cfg.moe
+    spec = make_ep_spec(cfg, dist, mode=mode, chunks=chunks, dtype=x.dtype)
+    eps = spec.experts_per_shard
+    nshards = math.prod(mesh.shape[a] for a in all_axes)
+
+    from repro.distributed.sharding import effective_batch_axes
+    Bg, Sg, _ = x.shape
+    bd = effective_batch_axes(dist, Bg)
+    sq = (dist.seq_axis if (Sg > 1 and dist.seq_axis
+                            and Sg % mesh.shape[dist.seq_axis] == 0) else None)
+    ep_spec_p = tuple(dist.ep_axes) if len(dist.ep_axes) > 1 else dist.ep_axes[0]
+    x_spec = P(bd, sq, None)
+
+    def island(x_l, rw, rb, wg, wu, wd):
+        Bl, Sl, D = x_l.shape
+        t = x_l.reshape(-1, D)
+        rout = route(mcfg, RouterParams(rw, rb), t, mcfg.n_experts)
+        fn = _expert_fn(wg, wu, wd)
+        if mode == "ll":
+            res = dispatch_combine_ll(spec, t, rout.top_idx, rout.top_w, fn)
+        else:
+            res = dispatch_combine_ht(spec, t, rout.top_idx, rout.top_w, fn)
+        y = res.out.reshape(Bl, Sl, D)
+        denom = jnp.float32(nshards)
+        aux = {
+            "aux_loss": jax.lax.psum(rout.aux_loss, all_axes) / denom,
+            "dropped": jax.lax.psum(res.aux["dropped"], all_axes) / denom,
+            "load": jax.lax.psum(
+                jax.nn.one_hot(rout.top_idx, spec.n_experts).sum((0, 1)),
+                all_axes),
+        }
+        return y, aux
+
+    rb = rparams.bias
+    if rb is None:
+        rb = jnp.zeros((spec.n_experts,), jnp.float32)
+    out_specs = (x_spec, {"aux_loss": P(), "dropped": P(), "load": P()})
+    y, aux = jax.shard_map(
+        island, mesh=mesh,
+        in_specs=(x_spec, P(None, None), P(None),
+                  P(ep_spec_p, None, None), P(ep_spec_p, None, None),
+                  P(ep_spec_p, None, None)),
+        out_specs=out_specs, check_vma=False,
+    )(x, rparams.w, rb, p["w_gate"], p["w_up"], p["w_down"])
+    return y, aux

@@ -1,0 +1,74 @@
+"""MoE gating: top-k softmax router with aux-loss-free bias + load-balance loss.
+
+The router output (per-token expert ids + weights) is what the paper calls the
+"token-routing decision computed at runtime in GPUs" — everything downstream
+(dispatch/combine) consumes RouterOut.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+
+Array = jax.Array
+
+
+class RouterParams(NamedTuple):
+    w: Array                  # (d_model, E_padded)
+    bias: Optional[Array]     # (E_padded,) aux-loss-free balancing bias (non-grad)
+
+
+class RouterOut(NamedTuple):
+    top_idx: Array     # (T, K) int32 expert ids (into padded expert space)
+    top_w: Array       # (T, K) combine weights (normalised probs)
+    probs: Array       # (T, E) full router probabilities (for aux loss)
+    aux_loss: Array    # scalar Switch-style load-balance loss
+
+
+def router_init(d_model: int, n_experts_padded: int, key: Array,
+                aux_free_bias: bool) -> RouterParams:
+    w = jax.random.normal(key, (d_model, n_experts_padded), jnp.float32)
+    w = w / math.sqrt(d_model)
+    b = jnp.zeros((n_experts_padded,), jnp.float32) if aux_free_bias else None
+    return RouterParams(w=w, bias=b)
+
+
+def route(moe: MoEConfig, p: RouterParams, x: Array, n_experts_real: int) -> RouterOut:
+    """x: (T, d_model). Experts >= n_experts_real are padding and masked out."""
+    T, _ = x.shape
+    e_pad = p.w.shape[1]
+    logits = (x.astype(jnp.float32) @ p.w).astype(jnp.float32)     # (T, E)
+    if e_pad > n_experts_real:
+        pad_mask = jnp.arange(e_pad) >= n_experts_real
+        logits = jnp.where(pad_mask[None, :], -jnp.inf, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # aux-loss-free balancing: bias shifts *selection* only; combine weights
+    # still come from the unbiased probabilities (DeepSeek-V3 style).
+    sel = logits if p.bias is None else logits + jax.lax.stop_gradient(p.bias)
+    _, top_idx = jax.lax.top_k(sel, moe.top_k)
+    top_idx = top_idx.astype(jnp.int32)
+    top_p = jnp.take_along_axis(probs, top_idx, axis=-1)
+    top_w = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    # Switch load-balance loss: E * sum_e f_e * P_e
+    onehot = jax.nn.one_hot(top_idx, e_pad, dtype=jnp.float32).sum(1)  # (T, E)
+    f = onehot.mean(0)
+    pbar = probs.mean(0)
+    aux = n_experts_real * jnp.sum(f * pbar) * moe.aux_loss_weight
+    return RouterOut(top_idx=top_idx, top_w=top_w.astype(x.dtype),
+                     probs=probs, aux_loss=aux)
+
+
+def update_aux_free_bias(p: RouterParams, out: RouterOut, n_experts_real: int,
+                         lr: float = 1e-3) -> RouterParams:
+    """Post-step bias update: push load toward uniform (sign rule, DeepSeek)."""
+    if p.bias is None:
+        return p
+    e_pad = p.bias.shape[0]
+    load = jax.nn.one_hot(out.top_idx, e_pad, dtype=jnp.float32).sum((0, 1))
+    target = load.sum() / n_experts_real
+    err = jnp.where(jnp.arange(e_pad) < n_experts_real, target - load, 0.0)
+    return p._replace(bias=p.bias + lr * jnp.sign(err))

@@ -1,0 +1,10 @@
+from repro.core.transport.ep_executor import EPWorld
+from repro.core.transport.fifo import FLAG_FENCE, FifoChannel, Op, TransferCmd
+from repro.core.transport.proxy import Proxy, SymmetricMemory
+from repro.core.transport.semantics import (ControlBuffer, ImmKind, pack_imm,
+                                            unpack_imm)
+from repro.core.transport.simulator import Message, NetConfig, Network
+
+__all__ = ["EPWorld", "FLAG_FENCE", "FifoChannel", "Op", "TransferCmd",
+           "Proxy", "SymmetricMemory", "ControlBuffer", "ImmKind", "pack_imm",
+           "unpack_imm", "Message", "NetConfig", "Network"]

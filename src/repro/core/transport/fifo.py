@@ -1,0 +1,158 @@
+"""CPU-GPU FIFO channel (paper §3.1), bit-faithful at host level.
+
+A TransferCmd is a 128-bit descriptor (4 x uint32) — one GPU instruction /
+MMIO doorbell per command in the real system.  The channel is a bounded
+single-producer single-consumer ring: the producer ("GPU thread") writes at
+the tail, the consumer ("CPU proxy thread") reads at the head.  The bound
+``k_max_inflight`` is the paper's flow-control knob: a full ring
+back-pressures the producer, pacing GPU-initiated communication.
+
+The GPU side caches the head value (``_cached_head``) so polling for space
+does not cross "PCIe" (here: does not touch the consumer-owned counter)
+until the cache goes stale — the paper's tail/head-placement optimisation.
+"""
+from __future__ import annotations
+
+import struct
+import threading
+from dataclasses import dataclass
+from enum import IntEnum
+from typing import Optional
+
+import numpy as np
+
+
+class Op(IntEnum):
+    WRITE = 1          # one-sided RDMA write
+    ATOMIC = 2         # standalone atomic (emulated via immediate data)
+    DRAIN = 3          # drain CQ up to idx
+    BARRIER = 4        # all-peer or same-rail barrier
+    WRITE_ATOMIC = 5   # write with piggybacked atomic (completion counter)
+
+
+FLAG_FENCE = 0x1   # atomic uses LL completion-fence semantics (else HT seq)
+
+
+@dataclass(frozen=True)
+class TransferCmd:
+    """Decoded descriptor.  Packs into exactly 128 bits."""
+
+    op: Op
+    dst_rank: int       # 12 bits
+    channel: int        # 8 bits
+    src_off: int        # 32 bits (symmetric-memory offset)
+    dst_off: int        # 32 bits
+    length: int         # 20 bits (bytes)
+    value: int          # 12 bits (atomic increment / expert idx / barrier tag)
+    flags: int = 0      # 8 bits (FLAG_FENCE, ...)
+
+    def pack(self) -> np.ndarray:
+        w0 = (int(self.op) & 0xF) | ((self.dst_rank & 0xFFF) << 4) | \
+             ((self.channel & 0xFF) << 16) | ((self.flags & 0xFF) << 24)
+        w3 = (self.length & 0xFFFFF) | ((self.value & 0xFFF) << 20)
+        return np.array([w0, self.src_off & 0xFFFFFFFF,
+                         self.dst_off & 0xFFFFFFFF, w3], dtype=np.uint32)
+
+    @staticmethod
+    def unpack(words: np.ndarray) -> "TransferCmd":
+        w0, w1, w2, w3 = (int(x) for x in words)
+        return TransferCmd(op=Op(w0 & 0xF), dst_rank=(w0 >> 4) & 0xFFF,
+                           channel=(w0 >> 16) & 0xFF, src_off=w1, dst_off=w2,
+                           length=w3 & 0xFFFFF, value=(w3 >> 20) & 0xFFF,
+                           flags=(w0 >> 24) & 0xFF)
+
+
+class FifoChannel:
+    """Bounded SPSC ring of 128-bit TransferCmds.
+
+    Counters are monotonically increasing; slot = counter % capacity.
+    ``push`` returns a global index usable with ``check_completion``.
+    """
+
+    def __init__(self, k_max_inflight: int = 64):
+        self.capacity = k_max_inflight
+        self.buf = np.zeros((k_max_inflight, 4), dtype=np.uint32)
+        self._tail = 0              # producer-owned (next write)
+        self._head = 0              # consumer-owned (next read)
+        self._cached_head = 0       # producer's stale copy (avoids "PCIe" read)
+        self._pcie_reads = 0        # instrumentation: cross-domain reads
+        self._lock = threading.Lock()
+        self._not_full = threading.Condition(self._lock)
+        self._not_empty = threading.Condition(self._lock)
+        self.closed = False
+
+    # ----------------------------------------------------- producer (GPU) --
+    def try_push(self, cmd: TransferCmd) -> Optional[int]:
+        """Non-blocking push; None if the ring is full (flow control)."""
+        if self._tail - self._cached_head >= self.capacity:
+            with self._lock:
+                self._cached_head = self._head      # one "PCIe" crossing
+                self._pcie_reads += 1
+            if self._tail - self._cached_head >= self.capacity:
+                return None
+        idx = self._tail
+        self.buf[idx % self.capacity] = cmd.pack()
+        with self._not_empty:
+            self._tail = idx + 1
+            self._not_empty.notify()
+        return idx
+
+    def push(self, cmd: TransferCmd, timeout: float = 10.0) -> int:
+        """Blocking push: waits for space (the paper's sender pacing)."""
+        idx = self.try_push(cmd)
+        if idx is not None:
+            return idx
+        with self._not_full:
+            ok = self._not_full.wait_for(
+                lambda: self._tail - self._head < self.capacity or self.closed,
+                timeout)
+            if not ok:
+                raise TimeoutError("FIFO full: consumer stalled")
+            if self.closed:
+                raise RuntimeError("channel closed")
+            self._cached_head = self._head
+        return self.push(cmd, timeout)
+
+    def check_completion(self, idx: int) -> bool:
+        """Has the command at ``idx`` been popped by the CPU side?"""
+        with self._lock:
+            return self._head > idx
+
+    # ----------------------------------------------------- consumer (CPU) --
+    def poll(self) -> Optional[tuple[int, TransferCmd]]:
+        """Read (without consuming) the head command."""
+        with self._lock:
+            if self._head >= self._tail:
+                return None
+            idx = self._head
+        return idx, TransferCmd.unpack(self.buf[idx % self.capacity])
+
+    def pop(self) -> Optional[tuple[int, TransferCmd]]:
+        with self._not_full:
+            if self._head >= self._tail:
+                return None
+            idx = self._head
+            cmd = TransferCmd.unpack(self.buf[idx % self.capacity])
+            self._head = idx + 1
+            self._not_full.notify()
+        return idx, cmd
+
+    def wait_nonempty(self, timeout: float = 0.1) -> bool:
+        with self._not_empty:
+            return self._not_empty.wait_for(
+                lambda: self._head < self._tail or self.closed, timeout)
+
+    def close(self):
+        with self._lock:
+            self.closed = True
+            self._not_empty.notify_all()
+            self._not_full.notify_all()
+
+    @property
+    def inflight(self) -> int:
+        with self._lock:
+            return self._tail - self._head
+
+    @property
+    def pcie_reads(self) -> int:
+        return self._pcie_reads

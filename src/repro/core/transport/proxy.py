@@ -1,0 +1,184 @@
+"""Multithreaded CPU proxy (paper §3.2): consumes TransferCmds from FIFO
+channels and executes GPUDirect-RDMA-equivalent operations over the network
+model, bridging delivery semantics with the receiver-side control buffer.
+
+One proxy per "GPU" (rank); ``n_threads`` worker threads each own a disjoint
+subset of FIFO channels (thread i serves channels i, i+T, ... — no shared
+state between threads, as in the paper).  QP selection round-robins across
+the thread's QPs unless the command pins a channel (ordering domain).
+
+Atomics are emulated EFA-style (§4.1): a zero-byte write carrying the value
+in immediate data; the receiver proxy updates host-memory counters when the
+guard in the ControlBuffer passes.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.transport.fifo import FifoChannel, Op, TransferCmd
+from repro.core.transport.semantics import (ControlBuffer, ImmKind, pack_imm,
+                                            unpack_imm)
+from repro.core.transport.simulator import Message, Network
+
+
+@dataclass
+class SymmetricMemory:
+    """Per-rank registered region; peers address each other by offset only
+    (base addresses exchanged at init; paper §3.2 'symmetric memory')."""
+
+    data: np.ndarray                 # byte-addressable payload region
+    counters: np.ndarray             # host-visible atomic counters (int64)
+
+    @staticmethod
+    def create(size: int, n_counters: int = 256) -> "SymmetricMemory":
+        return SymmetricMemory(data=np.zeros(size, np.uint8),
+                               counters=np.zeros(n_counters, np.int64))
+
+
+class Proxy:
+    def __init__(self, rank: int, net: Network, mem: SymmetricMemory,
+                 n_threads: int = 4, n_channels: int = 8,
+                 k_max_inflight: int = 64, ordered_transport: bool = False):
+        self.rank = rank
+        self.net = net
+        self.mem = mem
+        self.n_threads = n_threads
+        self.channels = [FifoChannel(k_max_inflight) for _ in range(n_channels)]
+        self.ctrl: dict[int, ControlBuffer] = {}       # per source rank
+        self.ordered = ordered_transport
+        self._threads: list[threading.Thread] = []
+        self._stop = threading.Event()
+        self._seq: dict[tuple[int, int], int] = {}     # (dst, channel) -> seq
+        self._lock = threading.Lock()
+        self.stats = {"cmds": 0, "writes": 0, "atomics": 0, "held_max": 0}
+        self._barrier_state: dict[int, set] = {}
+        self._drained = threading.Event()
+        net.register(rank, self._on_deliver)
+
+    # --------------------------------------------------------- GPU side --
+    def push(self, ch: int, cmd: TransferCmd, block: bool = True) -> Optional[int]:
+        c = self.channels[ch % len(self.channels)]
+        return c.push(cmd) if block else c.try_push(cmd)
+
+    # ------------------------------------------------------- CPU threads --
+    def start(self):
+        for t in range(self.n_threads):
+            th = threading.Thread(target=self._worker, args=(t,), daemon=True)
+            th.start()
+            self._threads.append(th)
+
+    def stop(self):
+        self._stop.set()
+        for c in self.channels:
+            c.close()
+        for th in self._threads:
+            th.join(timeout=2.0)
+
+    def _worker(self, tid: int):
+        my = self.channels[tid::self.n_threads]
+        while not self._stop.is_set():
+            busy = False
+            for ch in my:
+                got = ch.poll()
+                if got is None:
+                    continue
+                idx, cmd = got
+                self._execute(cmd)
+                ch.pop()
+                busy = True
+            if not busy:
+                time.sleep(1e-5)
+
+    def drain_inline(self):
+        """Single-threaded execution of everything queued (deterministic
+        mode used by tests/benchmarks without starting worker threads)."""
+        progress = True
+        while progress:
+            progress = False
+            for ch in self.channels:
+                while True:
+                    got = ch.pop()
+                    if got is None:
+                        break
+                    self._execute(got[1])
+                    progress = True
+
+    # ------------------------------------------------------ cmd execution --
+    def _next_seq(self, dst: int, channel: int) -> int:
+        with self._lock:
+            k = (dst, channel)
+            s = self._seq.get(k, 0)
+            self._seq[k] = s + 1
+            return s % 4096
+
+    def _execute(self, cmd: TransferCmd):
+        self.stats["cmds"] += 1
+        if cmd.op in (Op.WRITE, Op.WRITE_ATOMIC):
+            self.stats["writes"] += 1
+            payload = self.mem.data[cmd.src_off:cmd.src_off + cmd.length].copy()
+            seq = self._next_seq(cmd.dst_rank, cmd.channel)
+            imm = pack_imm(ImmKind.WRITE, cmd.channel, seq, cmd.value & 0x3F, 0)
+            self.net.send(Message(self.rank, cmd.dst_rank, qp=cmd.channel,
+                                  kind="write", dst_off=cmd.dst_off,
+                                  payload=payload, imm=imm))
+            if cmd.op == Op.WRITE_ATOMIC:
+                self._send_atomic(cmd, fence=True)
+        elif cmd.op == Op.ATOMIC:
+            from repro.core.transport.fifo import FLAG_FENCE
+            self._send_atomic(cmd, fence=bool(cmd.flags & FLAG_FENCE))
+        elif cmd.op == Op.DRAIN:
+            self.net.flush()
+        elif cmd.op == Op.BARRIER:
+            # same-rail barrier via immediate data (leader = rank 0)
+            seq = self._next_seq(cmd.dst_rank, cmd.channel)
+            imm = pack_imm(ImmKind.BARRIER, cmd.channel, seq, 0,
+                           cmd.value & 0x3F)
+            self.net.send(Message(self.rank, cmd.dst_rank, qp=cmd.channel,
+                                  kind="imm", dst_off=0, payload=None, imm=imm))
+
+    def _send_atomic(self, cmd: TransferCmd, fence: bool):
+        self.stats["atomics"] += 1
+        slot = cmd.value & 0x3F
+        count = (cmd.value >> 6) & 0x3F
+        seq = self._next_seq(cmd.dst_rank, cmd.channel)
+        kind = ImmKind.FENCE_ATOMIC if fence else ImmKind.SEQ_ATOMIC
+        imm = pack_imm(kind, cmd.channel, seq, slot,
+                       count if fence else min(count, 63))
+        self.net.send(Message(self.rank, cmd.dst_rank, qp=cmd.channel,
+                              kind="imm", dst_off=cmd.dst_off, payload=None,
+                              imm=imm))
+
+    # ---------------------------------------------------------- receiver --
+    def _ctrl_for(self, src: int) -> ControlBuffer:
+        if src not in self.ctrl:
+            self.ctrl[src] = ControlBuffer()
+        return self.ctrl[src]
+
+    def _on_deliver(self, msg: Message):
+        cb = self._ctrl_for(msg.src)
+        if msg.kind == "write":
+            def apply(m=msg):
+                self.mem.data[m.dst_off:m.dst_off + m.payload.size] = m.payload
+            if self.ordered:
+                apply()     # RC transport: ordering already guaranteed
+                cb.applied_log.append(msg.imm)
+                kind, ch, seq, slot, _ = unpack_imm(msg.imm)
+                cb.writes_seen[slot] += 1
+                cb._bump_seq(ch, seq)
+                cb._drain(ch)
+            else:
+                cb.on_write(msg.imm, apply)
+        else:
+            kind, ch, seq, slot, value = unpack_imm(msg.imm)
+            if kind == ImmKind.BARRIER:
+                self._barrier_state.setdefault(value, set()).add(msg.src)
+                return
+            def apply(m=msg, s=slot):
+                self.mem.counters[m.dst_off % len(self.mem.counters)] += 1
+            cb.on_atomic(msg.imm, apply)
+        self.stats["held_max"] = max(self.stats["held_max"], cb.n_held)

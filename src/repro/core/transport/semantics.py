@@ -1,0 +1,141 @@
+"""Delivery-semantics bridging (paper §3.3, §4.1): immediate-data codec and
+the receiver-side control buffer.
+
+Heterogeneous NICs differ in ordering: ConnectX RC delivers in order, AWS
+EFA SRD is reliable-but-unordered, and EFA lacks hardware atomics.  The
+receiver CPU proxy therefore (a) tags every message with a 32-bit immediate
+carrying (kind, channel, seq, value), (b) applies *writes* immediately, and
+(c) holds *atomics* in a control buffer until their guard is satisfied:
+
+- LL completion fence: an atomic covering expert ``e`` with required count
+  ``X`` applies only once >= X writes for ``e`` have landed (any order).
+- HT partial ordering: an atomic with sequence ``s`` on channel ``c``
+  applies only after all messages with smaller sequence on ``c`` applied —
+  ordering is per-channel, never global.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from enum import IntEnum
+from typing import Callable, Optional
+
+
+class ImmKind(IntEnum):
+    WRITE = 0          # data write notification
+    FENCE_ATOMIC = 1   # LL: apply after `value` writes for expert `slot`
+    SEQ_ATOMIC = 2     # HT: apply in per-channel sequence order
+    BARRIER = 3
+
+
+def pack_imm(kind: ImmKind, channel: int, seq: int, slot: int, value: int) -> int:
+    """32-bit immediate: kind(2) | channel(6) | seq(12) | slot(6) | value(6)."""
+    assert 0 <= channel < 64 and 0 <= seq < 4096 and 0 <= slot < 64 \
+        and 0 <= value < 64, (channel, seq, slot, value)
+    return (int(kind) & 0x3) | (channel << 2) | (seq << 8) | (slot << 20) | \
+        (value << 26)
+
+
+def unpack_imm(imm: int) -> tuple[ImmKind, int, int, int, int]:
+    return (ImmKind(imm & 0x3), (imm >> 2) & 0x3F, (imm >> 8) & 0xFFF,
+            (imm >> 20) & 0x3F, (imm >> 26) & 0x3F)
+
+
+@dataclass(order=True)
+class _Held:
+    seq: int
+    imm: int = field(compare=False)
+    apply: Callable[[], None] = field(compare=False)
+
+
+class ControlBuffer:
+    """Receiver-side guard state for one peer connection.
+
+    ``writes_seen[slot]`` counts landed writes per expert slot (LL fence);
+    ``applied_seq[channel]`` tracks the next expected sequence (HT order).
+    Held atomics live in per-channel min-heaps keyed by sequence.
+    """
+
+    def __init__(self, n_slots: int = 64, n_channels: int = 64):
+        self.writes_seen = [0] * n_slots
+        self.next_seq = [0] * n_channels
+        self._arrived: dict[int, list[int]] = {}   # per-channel seq min-heaps
+        self.held_seq: dict[int, list[_Held]] = {}
+        self.held_fence: list[tuple[int, int, int, Callable]] = []
+        self.applied_log: list[int] = []     # imm values, in application order
+        self.held_peak = 0
+
+    # ------------------------------------------------------------ events --
+    def on_write(self, imm: int, apply: Callable[[], None]) -> None:
+        """A data write landed (RDMA writes apply immediately)."""
+        kind, ch, seq, slot, value = unpack_imm(imm)
+        assert kind == ImmKind.WRITE
+        apply()
+        self.writes_seen[slot] += 1
+        self._bump_seq(ch, seq)
+        self.applied_log.append(imm)
+        self._drain(ch)
+        self._drain_fences()
+
+    def on_atomic(self, imm: int, apply: Callable[[], None]) -> None:
+        kind, ch, seq, slot, value = unpack_imm(imm)
+        if kind == ImmKind.FENCE_ATOMIC:
+            if self.writes_seen[slot] >= value:
+                apply()
+                self.applied_log.append(imm)
+            else:
+                self.held_fence.append((slot, value, imm, apply))
+                self.held_peak = max(self.held_peak,
+                                     len(self.held_fence) + self._n_held_seq())
+        elif kind == ImmKind.SEQ_ATOMIC:
+            if self.next_seq[ch] >= seq:
+                apply()
+                self.applied_log.append(imm)
+                self._bump_seq(ch, seq)
+                self._drain(ch)
+            else:
+                heapq.heappush(self.held_seq.setdefault(ch, []),
+                               _Held(seq, imm, apply))
+                self.held_peak = max(self.held_peak,
+                                     len(self.held_fence) + self._n_held_seq())
+        else:
+            apply()
+            self.applied_log.append(imm)
+
+    # ----------------------------------------------------------- helpers --
+    def _bump_seq(self, ch: int, seq: int) -> None:
+        # sequences are assigned consecutively per channel by the sender;
+        # next_seq advances over the contiguous prefix of *applied* seqs
+        # (writes may land out of order and apply immediately, so arrivals
+        # are buffered in a heap until the prefix closes).
+        heapq.heappush(self._arrived.setdefault(ch, []), seq)
+        h = self._arrived[ch]
+        while h and h[0] == self.next_seq[ch]:
+            heapq.heappop(h)
+            self.next_seq[ch] += 1
+
+    def _drain(self, ch: int) -> None:
+        heap = self.held_seq.get(ch)
+        while heap and heap[0].seq <= self.next_seq[ch]:
+            h = heapq.heappop(heap)
+            h.apply()
+            self.applied_log.append(h.imm)
+            self._bump_seq(ch, h.seq)
+        self._drain_fences()
+
+    def _drain_fences(self) -> None:
+        still = []
+        for slot, value, imm, apply in self.held_fence:
+            if self.writes_seen[slot] >= value:
+                apply()
+                self.applied_log.append(imm)
+            else:
+                still.append((slot, value, imm, apply))
+        self.held_fence = still
+
+    def _n_held_seq(self) -> int:
+        return sum(len(v) for v in self.held_seq.values())
+
+    @property
+    def n_held(self) -> int:
+        return len(self.held_fence) + self._n_held_seq()

@@ -1,0 +1,90 @@
+"""Network model: reliable transports with configurable ordering.
+
+- "rc":  reliable, per-QP in-order delivery (ConnectX RC).
+- "srd": reliable, UNORDERED delivery (AWS EFA SRD): any in-flight message
+  may be delivered next (bounded by a reorder window for realism).
+
+Delivery is deterministic under a seed.  Latency/bandwidth accounting gives
+the benchmarks a cost model (paper Fig. 7/15 reproductions).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclass
+class Message:
+    src: int
+    dst: int
+    qp: int
+    kind: str            # "write" | "imm" (atomic-as-immediate) | "barrier"
+    dst_off: int
+    payload: Optional[np.ndarray]
+    imm: Optional[int]
+    inject_t: float = 0.0
+    size: int = 0
+
+
+@dataclass
+class NetConfig:
+    mode: str = "srd"            # "rc" | "srd"
+    reorder_window: int = 64     # srd: max messages a later one can overtake
+    base_latency_us: float = 5.0
+    bw_bytes_per_us: float = 25_000.0   # ~200 Gbit/s
+    seed: int = 0
+
+
+class Network:
+    """Central message switch.  ``flush`` delivers everything currently in
+    flight to the registered receivers, in transport order."""
+
+    def __init__(self, cfg: NetConfig, n_ranks: int):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.n_ranks = n_ranks
+        self.queues: dict[tuple[int, int], list[Message]] = {}
+        self.receivers: dict[int, Callable[[Message], None]] = {}
+        self.delivered = 0
+        self.bytes_moved = 0
+        self.clock_us = 0.0
+
+    def register(self, rank: int, on_deliver: Callable[[Message], None]):
+        self.receivers[rank] = on_deliver
+
+    def send(self, msg: Message):
+        msg.size = 0 if msg.payload is None else msg.payload.nbytes
+        msg.inject_t = self.clock_us
+        self.queues.setdefault((msg.src, msg.dst), []).append(msg)
+
+    def flush(self, steps: Optional[int] = None):
+        """Deliver in-flight messages.  rc: FIFO per (src,dst,qp); srd:
+        seeded shuffle within the reorder window."""
+        for key in sorted(self.queues):
+            q = self.queues[key]
+            if not q:
+                continue
+            if self.cfg.mode == "rc":
+                order = list(range(len(q)))
+            else:
+                order = self._srd_order(len(q))
+            for i in order:
+                m = q[i]
+                self.clock_us += self.cfg.base_latency_us * 0.01 + \
+                    m.size / self.cfg.bw_bytes_per_us
+                self.bytes_moved += m.size
+                self.delivered += 1
+                self.receivers[m.dst](m)
+            q.clear()
+
+    def _srd_order(self, n: int) -> list[int]:
+        w = self.cfg.reorder_window
+        order = list(range(n))
+        # bounded random displacement: swap each element with one up to w away
+        for i in range(n - 1, 0, -1):
+            j = int(self.rng.integers(max(0, i - w), i + 1))
+            order[i], order[j] = order[j], order[i]
+        return order

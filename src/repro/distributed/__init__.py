@@ -1,0 +1,3 @@
+from repro.distributed.sharding import DistCtx, make_dist_ctx
+
+__all__ = ["DistCtx", "make_dist_ctx"]

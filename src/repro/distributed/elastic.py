@@ -1,0 +1,73 @@
+"""Elastic EP (paper §6 "Elastic EP with CPU proxy", made concrete for TPU):
+re-shard a TrainState onto a different mesh after node loss / addition.
+
+On TPU, elasticity is a *restart* operation: the single-program SPMD world
+cannot shrink in place, so the recovery path is (1) checkpoint (or use the
+latest), (2) rebuild the mesh at the new size, (3) re-derive the DistCtx —
+EP capacity, expert placement and FSDP layouts all fall out of the sharding
+rules — and (4) restore the state under the new shardings.  Because our
+checkpoints are logical (full arrays, path-keyed), restore-to-any-mesh is
+free; this module packages the policy and validates divisibility.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import DistCtx, make_dist_ctx, param_shardings
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    old_shape: tuple
+    new_shape: tuple
+    new_axis_names: tuple
+    ep_degree_old: int
+    ep_degree_new: int
+    notes: list
+
+
+def plan_remesh(cfg: ModelConfig, old: DistCtx, new_mesh: Mesh) -> ElasticPlan:
+    """Validate a re-mesh and describe what changes."""
+    new = make_dist_ctx(cfg, new_mesh)
+    notes = []
+    if cfg.moe.enabled:
+        from repro.core.moe import padded_experts_static
+        e = padded_experts_static(cfg)
+        if e % max(new.ep_degree, 1):
+            raise ValueError(
+                f"padded experts {e} not divisible by new EP degree "
+                f"{new.ep_degree}; choose a mesh whose EP axes divide {e}")
+        notes.append(f"experts/shard: {e // max(old.ep_degree, 1)} -> "
+                     f"{e // max(new.ep_degree, 1)}")
+    for name in new_mesh.axis_names:
+        if name == "model" and cfg.d_model % new_mesh.shape[name]:
+            raise ValueError("d_model must divide the model axis")
+    return ElasticPlan(
+        old_shape=tuple(old.mesh.devices.shape),
+        new_shape=tuple(new_mesh.devices.shape),
+        new_axis_names=tuple(new_mesh.axis_names),
+        ep_degree_old=old.ep_degree, ep_degree_new=new.ep_degree,
+        notes=notes)
+
+
+def reshard_state(cfg: ModelConfig, state, new_mesh: Mesh):
+    """Device_put the (logical) state under the new mesh's shardings."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    new_dist = make_dist_ctx(cfg, new_mesh)
+
+    def move(subtree):
+        sh = param_shardings(cfg, new_dist, subtree)
+        return jax.tree.map(lambda x, s: jax.device_put(x, s), subtree, sh)
+
+    params = move(state.params)
+    # every leaf must land on the new mesh, including replicated scalars
+    step = jax.device_put(state.opt.step, NamedSharding(new_mesh, P()))
+    opt = state.opt._replace(step=step, mu=move(state.opt.mu),
+                             nu=move(state.opt.nu))
+    return state._replace(params=params, opt=opt), new_dist

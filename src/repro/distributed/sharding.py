@@ -1,0 +1,224 @@
+"""Mesh-aware distribution context and partition rules.
+
+One ``DistCtx`` describes how a model maps onto the production mesh:
+- batch over ("pod","data") (multi-pod) or ("data",)
+- sequence (residual stream) over "model"  (sequence parallelism)
+- attention heads / FFN inner / vocab over "model"  (tensor parallelism)
+- experts over ("pod","model") when divisible, else ("model",)  (EP)
+- master params / optimizer moments additionally over "data"  (ZeRO/FSDP)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class DistCtx:
+    mesh: Mesh
+    batch_axes: tuple[str, ...]
+    seq_axis: Optional[str]
+    model_axis: Optional[str]
+    ep_axes: tuple[str, ...]
+    fsdp_axes: tuple[str, ...]      # axes opt-state / master params shard over
+
+    @property
+    def ep_degree(self) -> int:
+        return int(jnp.prod(jnp.array(
+            [self.mesh.shape[a] for a in self.ep_axes]))) if self.ep_axes else 1
+
+    def axis_size(self, name: Optional[str]) -> int:
+        return self.mesh.shape[name] if name else 1
+
+    def sh(self, *spec) -> NamedSharding:
+        return NamedSharding(self.mesh, P(*spec))
+
+    def constraint(self, x, *spec):
+        return jax.lax.with_sharding_constraint(x, self.sh(*spec))
+
+
+def make_dist_ctx(cfg: ModelConfig, mesh: Mesh) -> DistCtx:
+    axes = list(mesh.axis_names)
+    multi_pod = "pod" in axes
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    model_axis = "model" if "model" in axes else None
+    # EP spans (pod, model) when the padded expert count divides that degree,
+    # else model only (pod becomes pure DP for experts) — DESIGN.md §4.
+    ep_axes: tuple[str, ...] = ()
+    if cfg.moe.enabled and model_axis:
+        pm = mesh.shape[model_axis]
+        if multi_pod and cfg.padded_experts(mesh.shape["pod"] * pm) % (
+                mesh.shape["pod"] * pm) == 0 and cfg.moe.n_experts >= mesh.shape["pod"] * pm:
+            ep_axes = ("pod", model_axis)
+        else:
+            ep_axes = (model_axis,)
+    fsdp = ("data",) if "data" in axes else ()
+    return DistCtx(mesh=mesh, batch_axes=batch_axes, seq_axis=model_axis,
+                   model_axis=model_axis, ep_axes=ep_axes, fsdp_axes=fsdp)
+
+
+# -------------------------------------------------------- partition rules --
+def _leaf_rule(cfg: ModelConfig, dist: DistCtx, path: tuple, leaf) -> P:
+    """PartitionSpec for one param leaf, keyed on its tree path.
+
+    Weights are sharded over "model" (TP / EP) and over the fsdp axis on a
+    free dim (ZeRO: master params, moments, and the bf16 compute copy all
+    live sharded; per-layer all-gathers happen inside the scan)."""
+    m = dist.model_axis
+    f = dist.fsdp_axes[0] if dist.fsdp_axes else None
+    ep = tuple(dist.ep_axes) if dist.ep_axes else ((m,) if m else ())
+    ep_s = ep if len(ep) > 1 else (ep[0] if ep else None)
+    keys = [getattr(k, "key", None) or getattr(k, "name", None) or str(k)
+            for k in path]
+    name = keys[-1]
+    in_blocks = keys and keys[0] == "blocks"
+    in_moe = "moe" in keys and "shared" not in keys
+
+    def spec(*dims):  # left-pad with None for the stacked period dim
+        pad = (None,) * (leaf.ndim - len(dims))
+        dims = pad + dims
+        # drop axes that don't divide the dim (e.g. 8 kv heads on model=16);
+        # input shardings must be exactly divisible.
+        out = []
+        for size, ax in zip(leaf.shape, dims):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            import math as _m
+            deg = _m.prod(dist.mesh.shape[a] for a in axes)
+            out.append(ax if size % deg == 0 else None)
+        return P(*out)
+
+    if name == "embed":
+        return P(m, f)
+    if name == "lm_head":
+        return P(f, m)
+    if name in ("final_ln", "ln1", "ln2", "q_norm", "k_norm", "router_w",
+                "router_b"):
+        return P(*((None,) * leaf.ndim))
+    if in_moe and name in ("w_gate", "w_up"):
+        return spec(ep_s, f, None)          # (E, D, F)
+    if in_moe and name == "w_down":
+        return spec(ep_s, f, None)          # (E, F, D)
+    if name in ("w_gate", "w_up"):
+        return spec(f, m)                   # (D, F)
+    if name == "w_down":
+        return spec(m, f)                   # (F, D)
+    msize = dist.mesh.shape[m] if m else 1
+    if name in ("wq", "wk", "wv"):
+        # shard heads over model when divisible (e.g. 8 kv heads on a
+        # 16-way model axis); otherwise replicate (GQA kv projections are
+        # small, and head-dim sharding triggers involuntary SPMD remat)
+        if leaf.shape[-2] % msize == 0:
+            return spec(f, m, None)         # (D, H, hd)
+        return spec(f, None, None)
+    if name == "wo":
+        if leaf.shape[-3] % msize == 0:
+            return spec(m, None, f)         # (H, hd, D)
+        return spec(None, None, f)
+    if name in ("bq", "bk", "bv"):
+        if leaf.shape[-2] % msize == 0:
+            return spec(m, None)            # (H, hd)
+        return spec(None, None)
+    if name in ("in_proj", "z_proj"):
+        return spec(f, m)                   # (D, Di)
+    if name == "conv_w":
+        return spec(None, m)                # (dc, Di)
+    if name in ("conv_b", "dt_b", "D"):
+        return spec(m)                      # (Di,)
+    if name in ("x_proj", "A_log"):
+        return spec(m, None)                # (Di, *)
+    if name == "dt_w":
+        return spec(None, m)                # (R, Di)
+    if name == "out_proj":
+        return spec(m, f)                   # (Di, D)
+    if name in ("row", "col"):              # factored optimizer moments
+        return P(*((None,) * leaf.ndim))
+    return P(*((None,) * leaf.ndim))
+
+
+def param_pspecs(cfg: ModelConfig, dist: DistCtx, params) -> dict:
+    """PartitionSpec pytree mirroring ``params`` (works for optimizer moment
+    trees too, since they mirror the param structure)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _leaf_rule(cfg, dist, p, l), params)
+
+
+def param_shardings(cfg: ModelConfig, dist: DistCtx, params):
+    return jax.tree.map(lambda s: NamedSharding(dist.mesh, s),
+                        param_pspecs(cfg, dist, params))
+
+
+def cache_pspecs(cfg: ModelConfig, dist: DistCtx, cache, batch: int) -> dict:
+    """KV/Mamba cache specs: batch over effective batch axes, cache sequence
+    over (idle batch axes + model) — see cache_seq_axes."""
+    bd = effective_batch_axes(dist, batch)
+    sq = cache_seq_axes(dist, batch)
+    sq_s = sq if len(sq) > 1 else (sq[0] if sq else None)
+    m = dist.model_axis
+
+    def f(path, leaf):
+        last = path[-1]
+        name = getattr(last, "name", None) or getattr(last, "key", None) or str(last)
+        if name in ("k", "v"):
+            if leaf.ndim == 5 and leaf.shape[2] > 1:   # (P_, B, S, Hkv, hd)
+                return P(None, bd, sq_s, None, None)
+            return P(*((None,) * leaf.ndim))
+        if name == "conv":                              # (P_, B, dc-1, Di)
+            if leaf.shape[-1] > 1:
+                return P(None, bd, None, m)
+            return P(*((None,) * leaf.ndim))
+        if name == "ssm":                               # (P_, B, Di, N)
+            if leaf.shape[-2] > 1:
+                return P(None, bd, m, None)
+            return P(*((None,) * leaf.ndim))
+        return P(*((None,) * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def scan_period(cfg: ModelConfig) -> tuple[int, int]:
+    """(period, n_periods): layers repeat with this period; params for each
+    slot in the period are stacked over n_periods and scanned."""
+    import math
+    period = 1
+    if cfg.attn_every > 1:
+        period = math.lcm(period, cfg.attn_every)
+    if cfg.moe.enabled and cfg.moe.moe_every > 1:
+        period = math.lcm(period, cfg.moe.moe_every)
+    assert cfg.n_layers % period == 0, (cfg.arch_id, cfg.n_layers, period)
+    return period, cfg.n_layers // period
+
+
+def effective_batch_axes(dist: DistCtx, batch: int) -> tuple[str, ...]:
+    """Batch axes usable for this global batch (all-or-nothing: decode
+    batches smaller than the DP degree replicate instead)."""
+    import math as _m
+    prod = _m.prod(dist.mesh.shape[a] for a in dist.batch_axes)
+    return dist.batch_axes if batch % prod == 0 else ()
+
+
+def cache_seq_axes(dist: DistCtx, batch: int) -> tuple[str, ...]:
+    """Axes the KV-cache sequence dim shards over: the model axis plus any
+    batch axes left idle by a tiny decode batch (long_500k: all three)."""
+    eff = effective_batch_axes(dist, batch)
+    idle = tuple(a for a in dist.batch_axes if a not in eff)
+    m = (dist.model_axis,) if dist.model_axis else ()
+    return idle + m
+
+
+def batch_spec(dist: DistCtx) -> P:
+    """(B, S) token batches."""
+    return P(dist.batch_axes, dist.seq_axis)
+
+
+def act_spec(dist: DistCtx) -> P:
+    """(B, S, D) residual stream."""
+    return P(dist.batch_axes, dist.seq_axis, None)

@@ -1,0 +1,36 @@
+"""Weighted combine-reduce Pallas kernel: the final step of EP combine
+(out[t] = sum_k w[t,k] * parts[t,k,:]) with fp32 accumulation in VMEM.
+Memory-bound; the kernel fuses the K reads with the reduce so parts never
+round-trips through HBM twice.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cr_kernel(p_ref, w_ref, o_ref):
+    p = p_ref[...].astype(jnp.float32)          # (bt, K, D)
+    w = w_ref[...].astype(jnp.float32)          # (bt, K)
+    o_ref[...] = jnp.einsum("tkd,tk->td", p, w).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def combine_reduce_pallas(parts: jax.Array, weights: jax.Array, *,
+                          bt: int = 256, interpret: bool = False) -> jax.Array:
+    """parts: (T, K, D); weights: (T, K) -> (T, D)."""
+    T, K, D = parts.shape
+    bt = min(bt, T)
+    nt = pl.cdiv(T, bt)
+    return pl.pallas_call(
+        _cr_kernel,
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((bt, K, D), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((bt, K), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bt, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, D), parts.dtype),
+        interpret=interpret,
+    )(parts, weights)

@@ -1,0 +1,97 @@
+"""Flash-decoding Pallas TPU kernel: single-query attention over a long KV
+cache, split over sequence blocks with running-softmax state in VMEM.
+
+Complements the split-sequence *cross-shard* decode in
+``models.blocks._decode_attn_dist``: that island splits the cache across
+chips and LSE-merges; this kernel is the per-chip inner loop, streaming the
+local cache HBM->VMEM once with no (H, S) score materialisation.  Cache
+blocks entirely beyond ``pos`` are skipped with ``pl.when`` — decode touches
+only the live prefix.
+
+Validated against ``ref.flash_attention_ref`` semantics in interpret mode
+(tests/test_kernels.py::test_decode_attention).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dec_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                *, bk: int, nk: int, start: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]
+
+    @pl.when(start + j * bk <= pos)          # skip dead cache blocks
+    def _():
+        q = q_ref[0, 0]                       # (rep, d) q heads of this kv head
+        k = k_ref[0, 0]                       # (bk, d)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * (1.0 / math.sqrt(q.shape[-1]))
+        kpos = start + j * bk + jax.lax.broadcasted_iota(
+            jnp.int32, (q.shape[0], bk), 1)
+        s = jnp.where(kpos <= pos, s, -jnp.inf)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[:, None])
+        corr = jnp.exp(m_prev - m_safe)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "start", "interpret"))
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            pos: jax.Array, *, bk: int = 512, start: int = 0,
+                            interpret: bool = False) -> jax.Array:
+    """q: (B, H, D) one query per sequence; k/v: (B, S, Hkv, D) cache slice
+    covering global positions [start, start+S); pos: scalar current position.
+    GQA: q head h reads kv head h // (H // Hkv).  Returns (B, H, D)."""
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    bk = min(bk, S)
+    nk = pl.cdiv(S, bk)
+    qg = q.reshape(B, Hkv, rep, D)
+    kT = k.transpose(0, 2, 1, 3)              # (B, Hkv, S, D)
+    vT = v.transpose(0, 2, 1, 3)
+    out = pl.pallas_call(
+        functools.partial(_dec_kernel, bk=bk, nk=nk, start=start),
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # pos scalar prefetch
+            pl.BlockSpec((1, 1, rep, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((rep,), jnp.float32),
+                        pltpu.VMEM((rep,), jnp.float32),
+                        pltpu.VMEM((rep, D), jnp.float32)],
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32)[None], qg, kT, vT)
+    return out.reshape(B, H, D)

@@ -1,0 +1,99 @@
+"""Causal flash attention Pallas TPU kernel (prefill/training shapes).
+
+Grid (B, H, nq, nk) with the kv index innermost: the (m, l, acc) running
+softmax state lives in VMEM scratch and persists across the nk steps of one
+q block (TPU grid iteration is sequential).  Fully-masked blocks (kv block
+strictly above the diagonal) are skipped with ``pl.when`` — on TPU this
+avoids issuing the MXU ops entirely, the kernel-level analogue of the
+hierarchical causal decomposition used by the jnp path.
+
+GQA is handled by mapping q head h to kv head h // (H // Hkv) in the
+BlockSpec index maps — no materialised repeat.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale: float, bq: int, bk: int, nk: int, causal: bool):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = (not causal) or (j * bk <= i * bq + bq - 1)
+
+    @pl.when(run)
+    def _():
+        q = q_ref[0, 0]                       # (bq, d)
+        k = k_ref[0, 0]                       # (bk, d)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, -jnp.inf)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[:, None])
+        corr = jnp.exp(m_prev - m_safe)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, bq: int = 512, bk: int = 512,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, H, D)."""
+    Bt, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    bq, bk = min(bq, Sq), min(bk, Skv)
+    nq, nk = pl.cdiv(Sq, bq), pl.cdiv(Skv, bk)
+    scale = 1.0 / math.sqrt(D)
+    qT = q.transpose(0, 2, 1, 3)      # (B, H, Sq, D)
+    kT = k.transpose(0, 2, 1, 3)      # (B, Hkv, Skv, D)
+    vT = v.transpose(0, 2, 1, 3)
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, scale=scale, bq=bq, bk=bk, nk=nk,
+                          causal=causal),
+        grid=(Bt, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bt, H, Sq, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq, D), jnp.float32)],
+        interpret=interpret,
+    )(qT, kT, vT)
+    return out.transpose(0, 2, 1, 3)

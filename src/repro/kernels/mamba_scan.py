@@ -1,0 +1,78 @@
+"""Selective-scan (Mamba-1) Pallas TPU kernel.
+
+TPU adaptation of the CUDA selective-scan: instead of warp-level shuffles,
+the recurrent state h (bd x N) stays resident in VMEM scratch across the
+sequential chunk dimension of the grid (TPU grids iterate in order), and
+each chunk's inputs stream HBM->VMEM through the BlockSpec pipeline.  Within
+a chunk the recurrence runs as a fori_loop over time steps on the VPU —
+the op is elementwise-dominated (N=16), so MXU tiling buys nothing; the win
+is keeping h out of HBM entirely.
+
+Grid: (B, n_d_blocks, n_chunks); d-blocks are independent (parallel), chunks
+are the sequential axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, o_ref, h_ref, *,
+                 chunk: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0]                      # (chunk, bd)
+    dt = dt_ref[0]                    # (chunk, bd)
+    A = A_ref[...]                    # (bd, N)
+    Bs = B_ref[0]                     # (chunk, N)
+    Cs = C_ref[0]                     # (chunk, N)
+    Dp = D_ref[...]                   # (1, bd)
+
+    def step(t, carry):
+        h = carry                     # (bd, N)
+        dt_t = dt[t][:, None]         # (bd, 1)
+        dA = jnp.exp(dt_t * A)        # (bd, N)
+        dBx = dt_t * Bs[t][None, :] * x[t][:, None]
+        h = dA * h + dBx
+        y = (h * Cs[t][None, :]).sum(axis=1)        # (bd,)
+        o_ref[0, t, :] = (y + x[t] * Dp[0]).astype(o_ref.dtype)
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "chunk", "interpret"))
+def mamba_scan_pallas(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                      C: jax.Array, D: jax.Array, *, bd: int = 512,
+                      chunk: int = 128, interpret: bool = False) -> jax.Array:
+    """x/dt: (Bt, S, Di); A: (Di, N); B/C: (Bt, S, N); D: (Di,) -> (Bt, S, Di)."""
+    Bt, S, Di = x.shape
+    N = A.shape[1]
+    bd = min(bd, Di)
+    chunk = min(chunk, S)
+    ndb, nc = pl.cdiv(Di, bd), pl.cdiv(S, chunk)
+    out = pl.pallas_call(
+        functools.partial(_scan_kernel, chunk=chunk),
+        grid=(Bt, ndb, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, chunk, bd), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((bd, N), lambda b, d, c: (d, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((1, bd), lambda b, d, c: (0, d)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, bd), lambda b, d, c: (b, c, d)),
+        out_shape=jax.ShapeDtypeStruct((Bt, S, Di), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C, D[None, :])
+    return out

@@ -1,0 +1,85 @@
+"""Jitted public wrappers around the Pallas kernels with mode dispatch.
+
+Modes (set ``repro.kernels.ops.KERNEL_MODE`` or env ``REPRO_KERNEL_MODE``):
+- "ref":       pure-jnp oracle (default on CPU; what the dry-run lowers)
+- "interpret": pl.pallas_call(interpret=True) — CPU validation of kernel code
+- "pallas":    compiled Pallas kernel (TPU target)
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+KERNEL_MODE = os.environ.get("REPRO_KERNEL_MODE", "ref")
+
+
+def _mode(override: str | None = None) -> str:
+    return override or KERNEL_MODE
+
+
+def grouped_matmul(x, w, *, mode: str | None = None):
+    m = _mode(mode)
+    if m == "ref":
+        return _ref.grouped_matmul_ref(x, w)
+    from repro.kernels.grouped_matmul import grouped_matmul_pallas
+    return grouped_matmul_pallas(x, w, interpret=(m == "interpret"))
+
+
+def grouped_swiglu(x, w_gate, w_up, w_down, *, mode: str | None = None):
+    m = _mode(mode)
+    if m == "ref":
+        return _ref.grouped_swiglu_ref(x, w_gate, w_up, w_down)
+    from repro.kernels.grouped_matmul import grouped_swiglu_pallas
+    return grouped_swiglu_pallas(x, w_gate, w_up, w_down,
+                                 interpret=(m == "interpret"))
+
+
+def flash_attention(q, k, v, *, causal: bool = True, mode: str | None = None):
+    m = _mode(mode)
+    if m == "ref":
+        return _ref.flash_attention_ref(q, k, v, causal=causal)
+    from repro.kernels.flash_attention import flash_attention_pallas
+    return flash_attention_pallas(q, k, v, causal=causal,
+                                  interpret=(m == "interpret"))
+
+
+def mamba_scan(x, dt, A, B, C, D, *, mode: str | None = None):
+    m = _mode(mode)
+    if m == "ref":
+        return _ref.mamba_scan_ref(x, dt, A, B, C, D)
+    from repro.kernels.mamba_scan import mamba_scan_pallas
+    return mamba_scan_pallas(x, dt, A, B, C, D, interpret=(m == "interpret"))
+
+
+def combine_reduce(parts, weights, *, mode: str | None = None):
+    m = _mode(mode)
+    if m == "ref":
+        return _ref.combine_reduce_ref(parts, weights)
+    from repro.kernels.combine_reduce import combine_reduce_pallas
+    return combine_reduce_pallas(parts, weights, interpret=(m == "interpret"))
+
+
+def decode_attention(q, k, v, pos, *, start: int = 0, mode: str | None = None):
+    m = _mode(mode)
+    if m == "ref":
+        import jax.numpy as jnp
+        from repro.models.layers import decode_attention_local
+        part = decode_attention_local(q[:, None], k, v, pos, start=start)
+        l = jnp.where(part.l == 0, 1.0, part.l)
+        return (part.o / l[..., None])[:, 0].astype(q.dtype)
+    from repro.kernels.decode_attention import decode_attention_pallas
+    return decode_attention_pallas(q, k, v, pos, start=start,
+                                   interpret=(m == "interpret"))
+
+
+def rmsnorm(x, scale, eps: float = 1e-5, *, mode: str | None = None):
+    m = _mode(mode)
+    if m == "ref":
+        return _ref.rmsnorm_ref(x, scale, eps)
+    from repro.kernels.rmsnorm import rmsnorm_pallas
+    return rmsnorm_pallas(x, scale, eps, interpret=(m == "interpret"))

@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel.  Ground truth for tests and the
+CPU lowering path used by the dry-run (kernels validate against these in
+interpret mode; see tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def grouped_matmul_ref(x: Array, w: Array) -> Array:
+    """Per-group matmul: x (G, M, K) @ w (G, K, N) -> (G, M, N)."""
+    return jnp.einsum("gmk,gkn->gmn", x, w.astype(x.dtype))
+
+
+def grouped_swiglu_ref(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    """Grouped expert SwiGLU: x (E, C, D); w_* (E, D, F)/(E, F, D)."""
+    dt = x.dtype
+    g = jnp.einsum("ecd,edf->ecf", x, w_gate.astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", x, w_up.astype(dt))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, w_down.astype(dt))
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, causal: bool = True) -> Array:
+    """Naive full-materialisation attention. q (B,S,H,D), k/v (B,S,Hkv,D)."""
+    B, S, H, Dh = q.shape
+    rep = H // k.shape[2]
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / math.sqrt(Dh)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, k.shape[1]), bool))
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+
+
+def mamba_scan_ref(x: Array, dt: Array, A: Array, B: Array, C: Array,
+                   D: Array) -> Array:
+    """Selective SSM scan oracle (Mamba-1 recurrence, sequential).
+
+    x: (Bt, S, Di); dt: (Bt, S, Di) softplus-activated step sizes;
+    A: (Di, N) negative-real; B, C: (Bt, S, N); D: (Di,) skip.
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t ;  y_t = C_t . h_t + D*x_t
+    """
+    Bt, S, Di = x.shape
+    N = A.shape[1]
+    dA = jnp.exp(dt[..., None] * A[None, None])                  # (Bt,S,Di,N)
+    dBx = dt[..., None] * B[:, :, None, :] * x[..., None]        # (Bt,S,Di,N)
+
+    def step(h, inp):
+        da, dbx, c = inp
+        h = da * h + dbx
+        y = jnp.einsum("bdn,bn->bd", h, c)
+        return h, y
+
+    h0 = jnp.zeros((Bt, Di, N), x.dtype)
+    _, ys = jax.lax.scan(step, h0,
+                         (dA.swapaxes(0, 1), dBx.swapaxes(0, 1),
+                          C.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1) + x * D[None, None]
+
+
+def combine_reduce_ref(parts: Array, weights: Array) -> Array:
+    """Weighted combine: parts (T, K, D), weights (T, K) -> (T, D) in fp32."""
+    return jnp.einsum("tkd,tk->td", parts.astype(jnp.float32),
+                      weights.astype(jnp.float32)).astype(parts.dtype)
+
+
+def rmsnorm_ref(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)

@@ -1,0 +1,37 @@
+"""Fused RMSNorm Pallas kernel (single HBM pass; fp32 reduction in VMEM)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rms_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)             # (br, D)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) *
+                  s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "br", "interpret"))
+def rmsnorm_pallas(x: jax.Array, scale: jax.Array, eps: float = 1e-5, *,
+                   br: int = 256, interpret: bool = False) -> jax.Array:
+    """x: (..., D); scale: (D,)."""
+    orig = x.shape
+    D = orig[-1]
+    xf = x.reshape(-1, D)
+    R = xf.shape[0]
+    br = min(br, R)
+    nr = pl.cdiv(R, br)
+    out = pl.pallas_call(
+        functools.partial(_rms_kernel, eps=eps),
+        grid=(nr,),
+        in_specs=[pl.BlockSpec((br, D), lambda i: (i, 0)),
+                  pl.BlockSpec((1, D), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, D), x.dtype),
+        interpret=interpret,
+    )(xf, scale[None, :])
+    return out.reshape(orig)

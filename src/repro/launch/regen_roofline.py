@@ -1,0 +1,56 @@
+"""Recompute rec['roofline'] for every saved dry-run record (no recompile)
+after roofline-methodology changes, and emit the EXPERIMENTS.md tables.
+
+  PYTHONPATH=src python -m repro.launch.regen_roofline results/dryrun
+"""
+import json
+import sys
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+from repro.launch import roofline
+
+
+def regen(d: Path) -> list[dict]:
+    recs = []
+    for p in sorted(d.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") == "ok" and "cost" in r:
+            cfg = get_config(r["arch"])
+            cell = SHAPES[r["cell"]]
+            r["roofline"] = roofline.roofline_terms(cfg, cell, r)
+            p.write_text(json.dumps(r, indent=1))
+        recs.append(r)
+    return recs
+
+
+def table(recs: list[dict], tag: str = "baseline", chips: int = 256) -> str:
+    rows = []
+    head = ("| arch | cell | t_comp (s) | t_mem (s) | t_coll (s) | dominant "
+            "| useful | RF | RF(kernel) |")
+    rows.append(head)
+    rows.append("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("tag") != tag or r.get("chips") != chips:
+            continue
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['cell']} | — | — | — | skipped |"
+                        f" — | — | — |")
+            continue
+        if r.get("status") != "ok" or "roofline" not in r:
+            continue
+        ro = r["roofline"]
+        rfk = ro.get("roofline_fraction_kernel")
+        rows.append(
+            f"| {r['arch']} | {r['cell']} | {ro['t_compute_s']:.3g} "
+            f"| {ro['t_memory_s']:.3g} | {ro['t_collective_s']:.3g} "
+            f"| {ro['dominant']} | {ro['useful_flops_ratio']:.2f} "
+            f"| {ro['roofline_fraction']:.3f} "
+            f"| {'' if rfk is None else f'{rfk:.3f}'} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    d = Path(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    recs = regen(d)
+    print(table(recs))

@@ -1,0 +1,142 @@
+"""Roofline analysis (assignment deliverable g).
+
+Three terms per (arch x shape x mesh), derived from the compiled dry-run:
+
+  t_compute    = HLO_FLOPs_per_device / PEAK_FLOPS_BF16
+  t_memory     = HLO_bytes_per_device / HBM_BW
+  t_collective = collective_bytes_per_device / ICI_BW
+
+cost_analysis() reports the per-device (SPMD-partitioned) module; collective
+bytes are parsed from the partitioned HLO text (result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute).
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) gives the useful-compute
+ratio that exposes remat/recompute and masked-attention waste.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Optional
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Per-device bytes moved by each collective kind (result-shape bytes),
+    from the SPMD-partitioned HLO."""
+    out: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        if kind.endswith("-done"):
+            continue
+        b = _shape_bytes(shape_str)
+        out[kind] = out.get(kind, 0) + b
+        counts[kind] = counts.get(kind, 0) + 1
+    return {"bytes_by_kind": out, "count_by_kind": counts,
+            "total_bytes": sum(out.values())}
+
+
+def model_flops(cfg: ModelConfig, cell: ShapeCell) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); D = tokens processed."""
+    n = cfg.active_param_count() if cfg.moe.enabled else cfg.param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens          # fwd only
+    return 2.0 * n * cell.global_batch   # one token per sequence
+
+
+def decode_ideal_bytes(cfg: ModelConfig, cell: ShapeCell) -> float:
+    """Minimum HBM traffic for one decode step (global): read the active
+    params once + the live KV/SSM cache once.  Decode is memory-bound by
+    construction, so its roofline fraction is measured against this."""
+    n = cfg.active_param_count() if cfg.moe.enabled else cfg.param_count()
+    params = n * 2                                     # bf16
+    B, S = cell.global_batch, cell.seq_len
+    cache = 0.0
+    for i in range(cfg.n_layers):
+        if cfg.is_attn_layer(i):
+            cache += 2 * B * S * cfg.n_kv_heads * cfg.head_dim_ * 2
+        elif cfg.mamba.enabled:
+            di = cfg.mamba.expand * cfg.d_model
+            cache += B * di * cfg.mamba.d_state * 4 + \
+                B * (cfg.mamba.d_conv - 1) * di * 2
+    return params + cache
+
+
+def roofline_terms(cfg: ModelConfig, cell: ShapeCell, rec: dict) -> dict:
+    chips = rec["chips"]
+    flops_dev = rec["cost"]["flops"]
+    bytes_dev = rec["cost"]["bytes_accessed"]
+    coll_dev = rec["collectives"]["total_bytes"]
+    t_comp = flops_dev / PEAK_FLOPS_BF16
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"t_compute_s": t_comp, "t_memory_s": t_mem,
+             "t_collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(cfg, cell)
+    hlo_total = flops_dev * chips
+    bound = max(t_comp, t_mem, t_coll)
+    # roofline fraction: useful model flops at peak vs. the step's bound time
+    t_ideal = mf / (chips * PEAK_FLOPS_BF16)
+    if cell.is_decode:
+        # decode is memory-bound by construction: the ideal step time is
+        # one pass over active params + live cache, not a FLOP bound
+        t_ideal = max(t_ideal,
+                      decode_ideal_bytes(cfg, cell) / (chips * HBM_BW))
+    out = {
+        **terms,
+        "dominant": {"t_compute_s": "compute", "t_memory_s": "memory",
+                     "t_collective_s": "collective"}[dom],
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_flops_ratio": mf / hlo_total if hlo_total else 0.0,
+        "t_ideal_s": t_ideal,
+        "roofline_fraction": t_ideal / bound if bound else 0.0,
+    }
+    # kernel-adjusted view: memory term without the S^2 score traffic that
+    # the Pallas flash-attention kernel keeps in VMEM (see dryrun fit)
+    adj = rec["cost"].get("bytes_accessed_kernel_adj")
+    if adj is not None:
+        t_mem_k = adj / HBM_BW
+        bound_k = max(t_comp, t_mem_k, t_coll)
+        terms_k = {"t_compute_s": t_comp, "t_memory_s": t_mem_k,
+                   "t_collective_s": t_coll}
+        dom_k = max(terms_k, key=terms_k.get)
+        out["t_memory_kernel_s"] = t_mem_k
+        out["dominant_kernel"] = {
+            "t_compute_s": "compute", "t_memory_s": "memory",
+            "t_collective_s": "collective"}[dom_k]
+        out["roofline_fraction_kernel"] = t_ideal / bound_k if bound_k else 0.0
+    return out

@@ -1,0 +1,95 @@
+"""ShapeDtypeStruct stand-ins for every model input: weak-type-correct,
+shardable, no device allocation.  Used by the dry-run (lower + compile) for
+every (architecture x input shape x mesh) cell.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.distributed.sharding import (DistCtx, cache_pspecs,
+                                        effective_batch_axes, param_pspecs)
+from repro.models import model_zoo as Z
+
+
+def _sds(shape, dtype, dist: Optional[DistCtx], spec: Optional[P]):
+    if dist is None or spec is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(dist.mesh, spec))
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell,
+                dist: Optional[DistCtx] = None) -> dict:
+    """Batch input stand-ins for one shape cell."""
+    B, S = cell.global_batch, cell.seq_len
+    bd = effective_batch_axes(dist, B) if dist else None
+    m = dist.seq_axis if dist else None
+    if cell.is_decode:
+        out = {"tokens": _sds((B, 1), jnp.int32, dist, P(bd, None)),
+               "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+        return out
+    s_txt = S - cfg.frontend_prefix
+    sq = m if (m and s_txt % dist.mesh.shape[m] == 0) else None
+    out = {"tokens": _sds((B, s_txt), jnp.int32, dist, P(bd, sq)),
+           "labels": _sds((B, s_txt), jnp.int32, dist, P(bd, sq))}
+    if cfg.frontend_prefix:
+        psq = m if (m and cfg.frontend_prefix % dist.mesh.shape[m] == 0) else None
+        out["prefix"] = _sds((B, cfg.frontend_prefix, cfg.d_model),
+                             jnp.bfloat16, dist, P(bd, psq, None))
+    return out
+
+
+def param_specs_sds(cfg: ModelConfig, dist: Optional[DistCtx]) -> dict:
+    shapes = jax.eval_shape(lambda k: Z.init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    if dist is None:
+        return shapes
+    specs = param_pspecs(cfg, dist, shapes)
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(dist.mesh, sp)),
+        shapes, specs)
+
+
+def state_specs_sds(cfg: ModelConfig, dist: Optional[DistCtx]):
+    """TrainState (params + optimizer) stand-ins with shardings."""
+    from repro.optim import adamw
+    from repro.training.train_loop import TrainState
+    p = param_specs_sds(cfg, dist)
+    state_shapes = jax.eval_shape(
+        lambda pp: TrainState(pp, adamw.init_state(
+            pp, factored=(cfg.optimizer == "adafactor"))), p)
+    if dist is None:
+        return state_shapes
+
+    def shard(tree):
+        specs = param_pspecs(cfg, dist, tree)
+        return jax.tree.map(
+            lambda s, sp: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=NamedSharding(dist.mesh, sp)),
+            tree, specs)
+
+    opt = state_shapes.opt
+    scalar = jax.ShapeDtypeStruct((), jnp.int32,
+                                  sharding=NamedSharding(dist.mesh, P()))
+    return TrainState(params=shard(state_shapes.params),
+                      opt=opt._replace(step=scalar, mu=shard(opt.mu),
+                                       nu=shard(opt.nu)))
+
+
+def cache_specs_sds(cfg: ModelConfig, cell: ShapeCell,
+                    dist: Optional[DistCtx], dtype=jnp.bfloat16) -> dict:
+    B, S = cell.global_batch, cell.seq_len
+    shapes = jax.eval_shape(lambda: Z.init_cache(cfg, B, S, dtype))
+    if dist is None:
+        return shapes
+    specs = cache_pspecs(cfg, dist, shapes, B)
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(dist.mesh, sp)),
+        shapes, specs)

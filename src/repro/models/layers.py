@@ -1,0 +1,291 @@
+"""Shared transformer layer primitives: RMSNorm, RoPE, GQA attention, SwiGLU.
+
+All functions are pure (params passed explicitly) and jit/scan friendly.
+Attention is implemented flash-style (blocked over q and kv with a running
+softmax) so that 32k-sequence prefill lowers without materialising S x S
+score matrices; the Pallas TPU kernel in ``repro.kernels.flash_attention``
+shares the same oracle (``repro.kernels.ref``).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------- RMSNorm --
+def rmsnorm_init(d: int) -> Array:
+    return jnp.ones((d,), jnp.float32)
+
+
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * lax.rsqrt(var + eps) * scale).astype(dt)
+
+
+# ------------------------------------------------------------------- RoPE --
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, D) ; positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- Attention --
+class AttnParams(NamedTuple):
+    wq: Array          # (d_model, H, Dh)
+    wk: Array          # (d_model, Hkv, Dh)
+    wv: Array          # (d_model, Hkv, Dh)
+    wo: Array          # (H, Dh, d_model)
+    bq: Optional[Array]
+    bk: Optional[Array]
+    bv: Optional[Array]
+    q_norm: Optional[Array]   # (Dh,) qk-norm scales
+    k_norm: Optional[Array]
+
+
+def attn_init(cfg: ModelConfig, key: Array) -> AttnParams:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    so = 1.0 / math.sqrt(h * hd)
+    mk = lambda k, shape, sc: (jax.random.normal(k, shape, jnp.float32) * sc)
+    return AttnParams(
+        wq=mk(k1, (d, h, hd), s), wk=mk(k2, (d, hkv, hd), s),
+        wv=mk(k3, (d, hkv, hd), s), wo=mk(k4, (h, hd, d), so),
+        bq=jnp.zeros((h, hd), jnp.float32) if cfg.qkv_bias else None,
+        bk=jnp.zeros((hkv, hd), jnp.float32) if cfg.qkv_bias else None,
+        bv=jnp.zeros((hkv, hd), jnp.float32) if cfg.qkv_bias else None,
+        q_norm=rmsnorm_init(hd) if cfg.qk_norm else None,
+        k_norm=rmsnorm_init(hd) if cfg.qk_norm else None,
+    )
+
+
+def _qkv(cfg: ModelConfig, p: AttnParams, x: Array, positions: Array):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p.wq.astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p.wk.astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p.wv.astype(dt))
+    if p.bq is not None:
+        q = q + p.bq.astype(dt)
+        k = k + p.bk.astype(dt)
+        v = v + p.bv.astype(dt)
+    if p.q_norm is not None:
+        q = rmsnorm(q, p.q_norm, cfg.norm_eps)
+        k = rmsnorm(k, p.k_norm, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def flash_attention_blocked(q: Array, k: Array, v: Array, *, causal: bool = True,
+                            q_block: int = 512, kv_block: int = 512,
+                            causal_skip: bool = False) -> Array:
+    """Blocked causal attention, O(block^2) live memory.
+
+    q: (B, Sq, H, Dh); k/v: (B, Skv, Hkv, Dh) with H % Hkv == 0.
+    ``causal_skip``: hierarchical causal decomposition that avoids computing
+    fully-masked blocks (beyond-paper perf path; see EXPERIMENTS.md §Perf).
+    """
+    if causal and causal_skip and q.shape[1] == k.shape[1]:
+        return _causal_hierarchical(q, k, v, q_block)
+    B, Sq, H, Dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    nq = -(-Sq // q_block)
+    nk = -(-Skv // kv_block)
+    qb = q.reshape(B, nq, q_block, H, Dh)
+
+    def q_step(_, qi_idx):
+        i, qi = qi_idx                                 # qi: (B, qb, H, Dh)
+        o = jnp.zeros((B, q_block, H, Dh), jnp.float32)
+        m = jnp.full((B, q_block, H), -jnp.inf, jnp.float32)
+        l = jnp.zeros((B, q_block, H), jnp.float32)
+
+        def kv_step(carry, j):
+            o, m, l = carry
+            kj = lax.dynamic_slice_in_dim(k, j * kv_block, kv_block, axis=1)
+            vj = lax.dynamic_slice_in_dim(v, j * kv_block, kv_block, axis=1)
+            kj = jnp.repeat(kj, rep, axis=2)
+            vj = jnp.repeat(vj, rep, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bqhk", qi, kj).astype(jnp.float32) * scale
+            if causal:
+                qpos = i * q_block + jnp.arange(q_block)
+                kpos = j * kv_block + jnp.arange(kv_block)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, :, None, :], s, -jnp.inf)
+            mj = jnp.maximum(m, s.max(axis=-1))
+            mj_safe = jnp.where(jnp.isneginf(mj), 0.0, mj)
+            pj = jnp.exp(s - mj_safe[..., None])
+            corr = jnp.exp(m - mj_safe)
+            l2 = l * corr + pj.sum(axis=-1)
+            o2 = o * corr[..., None] + jnp.einsum(
+                "bqhk,bkhd->bqhd", pj.astype(vj.dtype), vj).astype(jnp.float32)
+            return (o2, mj, l2), None
+
+        (o, m, l), _ = lax.scan(kv_step, (o, m, l), jnp.arange(nk))
+        l = jnp.where(l == 0.0, 1.0, l)
+        return None, (o / l[..., None]).astype(q.dtype)
+
+    _, ob = lax.scan(q_step, None, (jnp.arange(nq), qb.swapaxes(0, 1)))
+    return ob.swapaxes(0, 1).reshape(B, Sq, H, Dh)
+
+
+class _POut(NamedTuple):
+    o: Array   # (B, S, H, Dh) fp32, un-normalised numerator
+    m: Array   # (B, S, H) running max
+    l: Array   # (B, S, H) running denom
+
+
+def _partial_attn(q, k, v, mask, scale) -> _POut:
+    rep = q.shape[2] // k.shape[2]
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bqhk", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        s = jnp.where(mask, s, -jnp.inf)
+    m = s.max(axis=-1)
+    # fully-masked rows (e.g. a cache shard entirely beyond `pos`) have
+    # m = -inf; exp(s - m) would be NaN — use a zero-safe max instead.
+    m_safe = jnp.where(jnp.isneginf(m), 0.0, m)
+    p = jnp.exp(s - m_safe[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bqhk,bkhd->bqhd", p.astype(v.dtype), v).astype(jnp.float32)
+    return _POut(o, m, l)
+
+
+def merge_partials(parts: list[_POut]) -> Array:
+    """LSE-merge partial attention results (flash-decoding combine)."""
+    m = parts[0].m
+    for p in parts[1:]:
+        m = jnp.maximum(m, p.m)
+    o = jnp.zeros_like(parts[0].o)
+    l = jnp.zeros_like(parts[0].l)
+    for p in parts:
+        c = jnp.exp(jnp.where(jnp.isneginf(p.m), -jnp.inf, p.m - m))
+        o = o + p.o * c[..., None]
+        l = l + p.l * c
+    l = jnp.where(l == 0.0, 1.0, l)
+    return o / l[..., None]
+
+
+def _causal_hierarchical(q, k, v, block: int) -> Array:
+    """Exact causal attention without fully-masked-block waste.
+
+    Level 0: block-diagonal causal blocks (masked).  Level k>=1: at stride
+    2^k * block, the upper half of each pair attends the lower half with NO
+    mask (dense matmuls, MXU-friendly).  FLOPs ~ S^2/2 instead of S^2.
+    """
+    B, S, H, Dh = q.shape
+    scale = 1.0 / math.sqrt(Dh)
+    nb = S // block
+    assert nb & (nb - 1) == 0, "hierarchical causal needs power-of-two blocks"
+    qb = q.reshape(B, nb, block, H, Dh)
+    kb = k.reshape(B, nb, block, k.shape[2], Dh)
+    vb = v.reshape(B, nb, block, v.shape[2], Dh)
+
+    # diagonal (causal-masked) blocks, batched over nb
+    pos = jnp.arange(block)
+    dmask = (pos[:, None] >= pos[None, :])[None, :, None, :]
+    diag = jax.vmap(lambda qi, ki, vi: _partial_attn(qi, ki, vi, dmask, scale),
+                    in_axes=(1, 1, 1), out_axes=1)(qb, kb, vb)
+    parts_per_block: list[list[_POut]] = [[_POut(diag.o[:, i], diag.m[:, i], diag.l[:, i])]
+                                          for i in range(nb)]
+    # off-diagonal levels: q half 2 attends kv half 1, unmasked
+    level = 1
+    while (1 << level) <= nb:
+        span = 1 << level
+        for start in range(0, nb, span):
+            lo = slice(start, start + span // 2)
+            hi = slice(start + span // 2, start + span)
+            kk = kb[:, lo].reshape(B, -1, k.shape[2], Dh)
+            vv = vb[:, lo].reshape(B, -1, v.shape[2], Dh)
+            qq = qb[:, hi].reshape(B, -1, H, Dh)
+            part = _partial_attn(qq, kk, vv, None, scale)
+            half = span // 2
+            for bi in range(half):
+                sl = slice(bi * block, (bi + 1) * block)
+                parts_per_block[start + half + bi].append(
+                    _POut(part.o[:, sl], part.m[:, sl], part.l[:, sl]))
+        level += 1
+    outs = [merge_partials(ps).astype(q.dtype) for ps in parts_per_block]
+    return jnp.concatenate(outs, axis=1).reshape(B, S, H, Dh)
+
+
+def attention(cfg: ModelConfig, p: AttnParams, x: Array, positions: Array,
+              *, causal_skip: bool = False) -> Array:
+    """Training/prefill self-attention: (B, S, d_model) -> (B, S, d_model)."""
+    q, k, v = _qkv(cfg, p, x, positions)
+    S = x.shape[1]
+    blk = min(512, S)
+    o = flash_attention_blocked(q, k, v, causal=True, q_block=blk, kv_block=blk,
+                                causal_skip=causal_skip)
+    return jnp.einsum("bshk,hkd->bsd", o, p.wo.astype(x.dtype))
+
+
+# -------------------------------------------------------- Decode attention --
+class KVCache(NamedTuple):
+    k: Array   # (B, S_max, Hkv, Dh)
+    v: Array
+
+
+def decode_qkv(cfg: ModelConfig, p: AttnParams, x: Array, pos: Array):
+    """x: (B, 1, d) new token; pos: scalar current position."""
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    return _qkv(cfg, p, x, positions)
+
+
+def decode_attention_local(q, cache_k, cache_v, pos, *, start: int = 0) -> _POut:
+    """Partial decode attention over a (possibly sharded) cache slice.
+
+    q: (B, 1, H, Dh); cache_*: (B, S_local, Hkv, Dh); valid positions are
+    global indices [0, pos]; this shard covers [start, start + S_local).
+    Returns un-normalised partials for LSE merge across shards.
+    """
+    S_local = cache_k.shape[1]
+    kpos = start + jnp.arange(S_local)
+    mask = (kpos <= pos)[None, None, None, :]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    return _partial_attn(q, cache_k, cache_v, mask, scale)
+
+
+# ----------------------------------------------------------------- SwiGLU --
+class MLPParams(NamedTuple):
+    w_gate: Array   # (d, ff)
+    w_up: Array     # (d, ff)
+    w_down: Array   # (ff, d)
+
+
+def mlp_init(d: int, ff: int, key: Array) -> MLPParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s, so = 1.0 / math.sqrt(d), 1.0 / math.sqrt(ff)
+    return MLPParams(
+        w_gate=jax.random.normal(k1, (d, ff), jnp.float32) * s,
+        w_up=jax.random.normal(k2, (d, ff), jnp.float32) * s,
+        w_down=jax.random.normal(k3, (ff, d), jnp.float32) * so,
+    )
+
+
+def swiglu(p: MLPParams, x: Array) -> Array:
+    dt = x.dtype
+    g = x @ p.w_gate.astype(dt)
+    u = x @ p.w_up.astype(dt)
+    return (jax.nn.silu(g) * u) @ p.w_down.astype(dt)

@@ -1,0 +1,108 @@
+"""Mamba-1 block (falcon-mamba / jamba mamba layers): init, train apply,
+single-step decode apply with carried (conv, ssm) state.
+
+Sharding (DESIGN.md §4): d_inner over "model"; batch over data axes; the
+sequence stays local to a shard for the scan (Mamba parallelises over batch
+and channels, not time).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+
+Array = jax.Array
+
+
+def mamba_dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    d = cfg.d_model
+    di = cfg.mamba.expand * d
+    dtr = cfg.mamba.dt_rank or -(-d // 16)
+    return d, di, dtr, cfg.mamba.d_state
+
+
+def mamba_init(cfg: ModelConfig, key: Array) -> dict:
+    d, di, dtr, n = mamba_dims(cfg)
+    dc = cfg.mamba.d_conv
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, di), jnp.float32) * s,
+        "z_proj": jax.random.normal(ks[1], (d, di), jnp.float32) * s,
+        "conv_w": jax.random.normal(ks[2], (dc, di), jnp.float32) * (1.0 / math.sqrt(dc)),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": jax.random.normal(ks[3], (di, dtr + 2 * n), jnp.float32) * (1.0 / math.sqrt(di)),
+        "dt_w": jax.random.normal(ks[4], (dtr, di), jnp.float32) * (1.0 / math.sqrt(dtr)),
+        "dt_b": jnp.log(jnp.expm1(  # softplus-inverse of ~[1e-3, 1e-1] inits
+            jnp.exp(jax.random.uniform(ks[5], (di,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, n)).copy()),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(key, (di, d), jnp.float32) * (1.0 / math.sqrt(di)),
+    }
+
+
+def _ssm_inputs(cfg: ModelConfig, p: dict, xc: Array):
+    """xc: post-conv activations (B, S, Di) -> (dt, A, Bs, Cs)."""
+    _, di, dtr, n = mamba_dims(cfg)
+    dt = xc.dtype
+    proj = xc @ p["x_proj"].astype(dt)                      # (B,S,R+2N)
+    dt_raw, Bs, Cs = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dts = jax.nn.softplus(dt_raw.astype(jnp.float32) @ p["dt_w"] + p["dt_b"])
+    A = -jnp.exp(p["A_log"])                                # (Di, N)
+    return dts.astype(jnp.float32), A, Bs.astype(jnp.float32), Cs.astype(jnp.float32)
+
+
+def mamba_apply(cfg: ModelConfig, p: dict, x: Array) -> Array:
+    """Training/prefill: x (B, S, d_model) -> (B, S, d_model)."""
+    dt = x.dtype
+    xi = x @ p["in_proj"].astype(dt)                        # (B,S,Di)
+    z = x @ p["z_proj"].astype(dt)
+    # causal depthwise conv over seq
+    dc = cfg.mamba.d_conv
+    xpad = jnp.pad(xi, ((0, 0), (dc - 1, 0), (0, 0)))
+    xc = sum(xpad[:, i:i + xi.shape[1]] * p["conv_w"][i].astype(dt)
+             for i in range(dc)) + p["conv_b"].astype(dt)
+    xc = jax.nn.silu(xc)
+    dts, A, Bs, Cs = _ssm_inputs(cfg, p, xc)
+    y = kops.mamba_scan(xc.astype(jnp.float32), dts, A, Bs, Cs, p["D"])
+    y = y.astype(dt) * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(dt)
+
+
+class MambaCache(NamedTuple):
+    conv: Array   # (B, d_conv-1, Di) trailing conv inputs
+    ssm: Array    # (B, Di, N) recurrent state (fp32)
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> MambaCache:
+    _, di, _, n = mamba_dims(cfg)
+    return MambaCache(conv=jnp.zeros((batch, cfg.mamba.d_conv - 1, di), dtype),
+                      ssm=jnp.zeros((batch, di, n), jnp.float32))
+
+
+def mamba_decode_step(cfg: ModelConfig, p: dict, x: Array,
+                      cache: MambaCache) -> tuple[Array, MambaCache]:
+    """x: (B, 1, d_model) one token -> (y (B,1,d), new cache)."""
+    dt = x.dtype
+    xi = (x[:, 0] @ p["in_proj"].astype(dt))                # (B, Di)
+    z = x[:, 0] @ p["z_proj"].astype(dt)
+    hist = jnp.concatenate([cache.conv, xi[:, None]], axis=1)  # (B, dc, Di)
+    xc = jnp.einsum("bcd,cd->bd", hist, p["conv_w"].astype(dt)) + p["conv_b"].astype(dt)
+    xc = jax.nn.silu(xc)
+    dts, A, Bs, Cs = _ssm_inputs(cfg, p, xc[:, None])
+    dts, Bs, Cs = dts[:, 0], Bs[:, 0], Cs[:, 0]             # (B,Di)/(B,N)
+    dA = jnp.exp(dts[..., None] * A[None])                  # (B,Di,N)
+    dBx = dts[..., None] * Bs[:, None, :] * xc.astype(jnp.float32)[..., None]
+    h = dA * cache.ssm + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cs) + xc.astype(jnp.float32) * p["D"]
+    y = y.astype(dt) * jax.nn.silu(z)
+    out = (y @ p["out_proj"].astype(dt))[:, None]
+    return out, MambaCache(conv=hist[:, 1:], ssm=h)

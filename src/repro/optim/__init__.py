@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamWState, apply_updates, global_norm, init_state
+from repro.optim.schedule import cosine_with_warmup
+
+__all__ = ["AdamWState", "apply_updates", "global_norm", "init_state",
+           "cosine_with_warmup"]

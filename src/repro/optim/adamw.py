@@ -1,0 +1,103 @@
+"""Optimizers in pure JAX: AdamW and a factored-second-moment variant
+(adafactor-style) for very large models (jamba-398B) whose fp32 Adam state
+would not fit the single-pod HBM budget (DESIGN.md §4).
+
+State layouts follow the param pytree; sharding of the state follows the
+param sharding (plus the fsdp axes — see distributed.sharding).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    mu: dict
+    nu: dict        # full second moment (adamw) or factored dict (adafactor)
+
+
+def _is_factorable(x: Array) -> bool:
+    return x.ndim >= 2 and x.shape[-1] >= 128 and x.shape[-2] >= 128
+
+
+def init_state(params: dict, *, factored: bool = False,
+               mu_dtype=jnp.float32) -> AdamWState:
+    mu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mu_dtype), params)
+    if not factored:
+        nu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    else:
+        def f(p):
+            if _is_factorable(p):
+                return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"full": jnp.zeros_like(p, dtype=jnp.float32)}
+        nu = jax.tree.map(f, params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+
+def apply_updates(params: dict, grads: dict, state: AdamWState, *,
+                  lr: float | Array, b1: float = 0.9, b2: float = 0.95,
+                  eps: float = 1e-8, weight_decay: float = 0.1,
+                  factored: bool = False,
+                  max_grad_norm: Optional[float] = 1.0,
+                  ) -> tuple[dict, AdamWState, dict]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    if max_grad_norm is not None:
+        scale = jnp.minimum(1.0, max_grad_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd_full(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mu2 = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+        nu2 = b2 * nu + (1 - b2) * g * g
+        u = (mu2 / c1) / (jnp.sqrt(nu2 / c2) + eps)
+        p2 = p - lr * (u + weight_decay * p)
+        return p2, mu2.astype(mu.dtype), nu2
+
+    def upd_fact(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mu2 = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+        if "full" in nu:
+            nu2 = {"full": b2 * nu["full"] + (1 - b2) * g * g}
+            v = nu2["full"] / c2
+        else:
+            g2 = g * g
+            row = b2 * nu["row"] + (1 - b2) * g2.mean(-1)
+            col = b2 * nu["col"] + (1 - b2) * g2.mean(-2)
+            nu2 = {"row": row, "col": col}
+            rmean = row.mean(-1, keepdims=True)[..., None]
+            v = (row[..., None] * col[..., None, :]) / jnp.maximum(rmean, 1e-30)
+            v = v / c2
+        u = (mu2 / c1) / (jnp.sqrt(v) + eps)
+        p2 = p - lr * (u + weight_decay * p)
+        return p2, mu2.astype(mu.dtype), nu2
+
+    if factored:
+        leaves_p, treedef = jax.tree_util.tree_flatten(params)
+        leaves_g = treedef.flatten_up_to(grads)
+        leaves_mu = treedef.flatten_up_to(state.mu)
+        leaves_nu = treedef.flatten_up_to(state.nu)
+        out = [upd_fact(p, g, m, n) for p, g, m, n in
+               zip(leaves_p, leaves_g, leaves_mu, leaves_nu)]
+        p2 = treedef.unflatten([o[0] for o in out])
+        mu2 = treedef.unflatten([o[1] for o in out])
+        nu2 = treedef.unflatten([o[2] for o in out])
+    else:
+        res = jax.tree.map(upd_full, params, grads, state.mu, state.nu)
+        p2 = jax.tree.map(lambda t: t[0], res, is_leaf=lambda t: isinstance(t, tuple))
+        mu2 = jax.tree.map(lambda t: t[1], res, is_leaf=lambda t: isinstance(t, tuple))
+        nu2 = jax.tree.map(lambda t: t[2], res, is_leaf=lambda t: isinstance(t, tuple))
+    return p2, AdamWState(step=step, mu=mu2, nu=nu2), {"grad_norm": gnorm}
+
+
+def global_norm(tree) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))

@@ -1,0 +1,14 @@
+"""LR schedules (pure functions of step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(step, *, peak_lr: float, warmup: int, total: int,
+                       floor_frac: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    # ramp from peak/warmup (not 0) so the first optimizer step is not a no-op
+    warm = peak_lr * (s + 1.0) / jnp.maximum(warmup, 1)
+    t = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(s < warmup, warm, cos)

@@ -1,0 +1,3 @@
+from repro.training.train_loop import (HParams, TrainState, Watchdog,
+                                       init_state, make_train_step,
+                                       train_loop, train_step)

@@ -1,0 +1,229 @@
+"""Training step + loop: value_and_grad over the sharded model, AdamW /
+factored updates, aux-loss-free router-bias adjustment, watchdog-based
+straggler/failure handling, checkpoint/restart.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import (DistCtx, batch_spec, param_pspecs,
+                                        param_shardings)
+from repro.models import model_zoo as Z
+from repro.optim import adamw
+from repro.optim.schedule import cosine_with_warmup
+
+Array = jax.Array
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: adamw.AdamWState
+
+
+@dataclass(frozen=True)
+class HParams:
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    max_grad_norm: float = 1.0
+    moe_mode: str = "ht"            # "ht" | "ll" | "ref"
+    moe_chunks: int = 1
+    causal_skip: bool = False
+    router_bias_lr: float = 1e-3
+    loss_chunk: int = 2048
+    seed: int = 0
+    unroll: bool = False        # python-loop layers (dry-run cost extraction)
+    sp_islands: bool = False    # manual TP+SP shard_map blocks (§Perf)
+    remat_policy: str = "full"  # "full" | "dots" (§Perf)
+
+
+def init_state(cfg: ModelConfig, key: Array, *,
+               dist: Optional[DistCtx] = None) -> TrainState:
+    if dist is not None:
+        shardings = None  # params created then resharded below
+
+        def initer(k):
+            return Z.init_params(cfg, k)
+
+        params = jax.jit(initer,
+                         out_shardings=_state_param_shardings(cfg, dist))(key)
+    else:
+        params = Z.init_params(cfg, key)
+    opt = adamw.init_state(params, factored=(cfg.optimizer == "adafactor"))
+    return TrainState(params=params, opt=opt)
+
+
+def _state_param_shardings(cfg, dist):
+    # shapes needed first: use eval_shape to build the sharding tree
+    shapes = jax.eval_shape(lambda k: Z.init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return param_shardings(cfg, dist, shapes)
+
+
+def state_shardings(cfg: ModelConfig, dist: DistCtx, state) -> TrainState:
+    """NamedSharding pytree for a TrainState (params + mirrored opt state)."""
+    pspec = param_shardings(cfg, dist, state.params)
+    mu = param_shardings(cfg, dist, state.opt.mu)
+    nu = param_shardings(cfg, dist, state.opt.nu)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    scalar = NamedSharding(dist.mesh, P())
+    return TrainState(params=pspec,
+                      opt=adamw.AdamWState(step=scalar, mu=mu, nu=nu))
+
+
+def _update_router_biases(cfg: ModelConfig, params: dict, loads: dict,
+                          lr: float) -> dict:
+    """Aux-loss-free balancing: sign-rule bias update per MoE layer."""
+    if not cfg.moe.enabled or lr == 0.0:
+        return params
+    e_real = cfg.moe.n_experts
+    blocks = dict(params["blocks"])
+    for slot, load in loads.items():           # load: (n_periods, E_pad)
+        if slot not in blocks or "moe" not in blocks[slot]:
+            continue
+        moe_p = dict(blocks[slot]["moe"])
+        if "router_b" not in moe_p:
+            continue
+        e_pad = load.shape[-1]
+        target = load.sum(-1, keepdims=True) / e_real
+        err = jnp.where(jnp.arange(e_pad)[None] < e_real, target - load, 0.0)
+        moe_p["router_b"] = moe_p["router_b"] + lr * jnp.sign(err)
+        blocks[slot] = {**blocks[slot], "moe": moe_p}
+    return {**params, "blocks": blocks}
+
+
+def train_step(cfg: ModelConfig, hp: HParams, dist: Optional[DistCtx],
+               state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+    """One optimizer step.  ``batch``: tokens (B,S), labels (B,S),
+    optional prefix (B,P,D)."""
+
+    def lf(params):
+        return Z.loss_fn(cfg, params, batch["tokens"], batch["labels"],
+                         batch.get("prefix"), dist=dist, moe_mode=hp.moe_mode,
+                         moe_chunks=hp.moe_chunks, causal_skip=hp.causal_skip,
+                         loss_chunk=hp.loss_chunk, unroll=hp.unroll,
+                         sp_islands=hp.sp_islands,
+                         remat_policy=hp.remat_policy)
+
+    (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(state.params)
+    lr = cosine_with_warmup(state.opt.step, peak_lr=hp.peak_lr,
+                            warmup=hp.warmup, total=hp.total_steps)
+    params2, opt2, om = adamw.apply_updates(
+        state.params, grads, state.opt, lr=lr, b1=hp.b1, b2=hp.b2,
+        weight_decay=hp.weight_decay, factored=(cfg.optimizer == "adafactor"),
+        max_grad_norm=hp.max_grad_norm)
+    params2 = _update_router_biases(cfg, params2, metrics.pop("loads"),
+                                    hp.router_bias_lr)
+    out_metrics = {"loss": loss, "lr": lr, **om,
+                   **{k: v for k, v in metrics.items()}}
+    return TrainState(params2, opt2), out_metrics
+
+
+def make_train_step(cfg: ModelConfig, hp: HParams,
+                    dist: Optional[DistCtx]) -> Callable:
+    fn = partial(train_step, cfg, hp, dist)
+    if dist is None:
+        return jax.jit(fn, donate_argnums=(0,))
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+@dataclass
+class WatchdogEvent:
+    step: int
+    elapsed: float
+    kind: str       # "straggler" | "failure"
+
+
+class Watchdog:
+    """Per-step wall-clock watermarking: flags stragglers (steps slower than
+    ``straggler_factor`` x the running median) and invokes the failure
+    callback on deadline breach (simulated node loss in tests)."""
+
+    def __init__(self, deadline_s: float = 600.0, straggler_factor: float = 2.0):
+        self.deadline = deadline_s
+        self.factor = straggler_factor
+        self.history: list[float] = []
+        self.events: list[WatchdogEvent] = []
+
+    def observe(self, step: int, elapsed: float) -> Optional[WatchdogEvent]:
+        ev = None
+        if elapsed > self.deadline:
+            ev = WatchdogEvent(step, elapsed, "failure")
+        elif self.history:
+            med = sorted(self.history)[len(self.history) // 2]
+            if elapsed > self.factor * med and len(self.history) >= 5:
+                ev = WatchdogEvent(step, elapsed, "straggler")
+        self.history.append(elapsed)
+        if len(self.history) > 100:
+            self.history.pop(0)
+        if ev:
+            self.events.append(ev)
+        return ev
+
+
+def train_loop(cfg: ModelConfig, hp: HParams, dist, data, *,
+               steps: int, state: Optional[TrainState] = None,
+               checkpointer=None, ckpt_every: int = 0,
+               log_every: int = 10, watchdog: Optional[Watchdog] = None,
+               fail_injector: Optional[Callable[[int], bool]] = None,
+               log_fn: Callable[[str], None] = print) -> tuple[TrainState, list]:
+    """Fault-tolerant loop: on injected/real failure, restore the latest
+    checkpoint and continue (restart-from-checkpoint recovery).
+
+    ``data``: either ``fn(step) -> batch`` (preferred — replaying a step
+    after checkpoint restore re-reads the SAME batch, making recovery
+    deterministic) or an iterator (legacy; replays advance the stream)."""
+    if state is None:
+        state = init_state(cfg, jax.random.PRNGKey(hp.seed), dist=dist)
+    if callable(data) and not hasattr(data, "__next__"):
+        get_batch = data
+    else:
+        it = iter(data)
+        get_batch = lambda s: next(it)  # noqa: E731
+    step_fn = make_train_step(cfg, hp, dist)
+    start = 0
+    if checkpointer is not None:
+        restored = checkpointer.restore_latest(state)
+        if restored is not None:
+            state, start = restored
+            log_fn(f"[train] restored checkpoint at step {start}")
+    history = []
+    step = start
+    while step < steps:
+        t0 = time.perf_counter()
+        if fail_injector is not None and fail_injector(step):
+            log_fn(f"[train] simulated failure at step {step}; recovering")
+            assert checkpointer is not None, "failure without checkpointing"
+            restored = checkpointer.restore_latest(state)
+            if restored is not None:
+                state, step = restored
+            step_fn = make_train_step(cfg, hp, dist)  # fresh executable
+            continue
+        batch = get_batch(step)
+        state, metrics = step_fn(state, batch)
+        elapsed = time.perf_counter() - t0
+        if watchdog is not None:
+            ev = watchdog.observe(step, elapsed)
+            if ev is not None:
+                log_fn(f"[watchdog] {ev.kind} at step {ev.step}: {ev.elapsed:.2f}s")
+        if log_every and step % log_every == 0:
+            log_fn(f"[train] step={step} loss={float(metrics['loss']):.4f} "
+                   f"xent={float(metrics['xent']):.4f} "
+                   f"gnorm={float(metrics['grad_norm']):.3f} "
+                   f"({elapsed*1e3:.0f} ms)")
+        history.append({k: float(v) for k, v in metrics.items()
+                        if jnp.ndim(v) == 0})
+        step += 1
+        if checkpointer is not None and ckpt_every and step % ckpt_every == 0:
+            checkpointer.save(state, step)
+    return state, history

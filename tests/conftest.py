@@ -1,0 +1,32 @@
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+# NOTE: no XLA_FLAGS here — smoke tests must see 1 device (assignment rule).
+# Multi-device tests run via run_distributed() subprocesses.
+
+
+def run_distributed(script: str, n_devices: int = 8, timeout: int = 900):
+    """Run a python snippet in a subprocess with N fake CPU devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"distributed subprocess failed:\nSTDOUT:\n{proc.stdout[-4000:]}"
+            f"\nSTDERR:\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def dist_runner():
+    return run_distributed

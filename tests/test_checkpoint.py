@@ -1,0 +1,69 @@
+"""Checkpointer: atomic writes, retention, resume, corruption fallback."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config, reduced_config
+from repro.training.train_loop import init_state
+
+
+def _tiny_state():
+    cfg = reduced_config(get_config("qwen3_1_7b"), n_layers=2, d_model=32,
+                         vocab=128)
+    return cfg, init_state(cfg, jax.random.PRNGKey(0))
+
+
+def test_roundtrip(tmp_path):
+    cfg, state = _tiny_state()
+    ck = Checkpointer(tmp_path)
+    ck.save(state, 7)
+    got, step = ck.restore_latest(state)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_retention(tmp_path):
+    cfg, state = _tiny_state()
+    ck = Checkpointer(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(state, s)
+    assert ck.list_steps() == [3, 4]
+
+
+def test_corruption_falls_back(tmp_path):
+    cfg, state = _tiny_state()
+    ck = Checkpointer(tmp_path, keep=5)
+    ck.save(state, 1)
+    p2 = ck.save(state, 2)
+    # crash mid-write: truncate the newest npz
+    with open(p2 / "state.npz", "r+b") as f:
+        f.truncate(100)
+    got, step = ck.restore_latest(state)
+    assert step == 1
+
+
+def test_missing_manifest_is_invisible(tmp_path):
+    cfg, state = _tiny_state()
+    ck = Checkpointer(tmp_path)
+    p = ck.save(state, 3)
+    os.remove(p / "MANIFEST.json")           # crashed before manifest
+    assert ck.list_steps() == []
+    assert ck.restore_latest(state) is None
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    cfg, state = _tiny_state()
+    ck = Checkpointer(tmp_path)
+    ck.save(state, 1)
+    bigger = jax.tree.map(lambda x: jnp.zeros((7,) + x.shape, x.dtype), state)
+    try:
+        ck.restore(bigger, 1)
+        raised = False
+    except ValueError:
+        raised = True
+    assert raised

@@ -1,0 +1,70 @@
+"""Config sanity: all 10 assigned archs load, param counts land in the
+ballpark their names claim, shape-cell applicability matches DESIGN.md."""
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, all_configs, cells_for, get_config
+
+# (arch, min_params, max_params) — total params, loose public-ballpark bands
+BANDS = {
+    "moonshot_v1_16b_a3b": (14e9, 30e9),     # assigned 48L variant is larger
+    "qwen2_moe_a2_7b": (12e9, 17e9),
+    "qwen3_1_7b": (1.4e9, 2.4e9),
+    "phi3_medium_14b": (12e9, 16e9),
+    "qwen2_72b": (68e9, 76e9),
+    "qwen3_4b": (3.2e9, 5.0e9),
+    "internvl2_26b": (17e9, 26e9),           # LM backbone only (ViT stubbed)
+    "musicgen_large": (2.5e9, 4.0e9),
+    "falcon_mamba_7b": (6.0e9, 8.5e9),
+    "jamba_1_5_large_398b": (350e9, 430e9),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_config_loads(arch):
+    cfg = get_config(arch)
+    assert cfg.arch_id == arch
+    assert cfg.n_layers > 0 and cfg.d_model > 0 and cfg.vocab_size > 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_band(arch):
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    lo, hi = BANDS[arch]
+    assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]B"
+
+
+def test_active_params_moe():
+    cfg = get_config("moonshot_v1_16b_a3b")
+    act = cfg.active_param_count()
+    assert act < cfg.param_count() / 3          # top-6 of 64 is sparse
+    dense = get_config("qwen2_72b")
+    assert dense.active_param_count() == dense.param_count()
+
+
+def test_long_500k_applicability():
+    runs_long = {a for a in ARCH_IDS if "long_500k" in cells_for(get_config(a))}
+    assert runs_long == {"falcon_mamba_7b", "jamba_1_5_large_398b"}
+
+
+def test_alias_lookup():
+    assert get_config("qwen3-1.7b").arch_id == "qwen3_1_7b"
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["long_500k"].seq_len == 524_288
+    assert SHAPES["decode_32k"].is_decode
+
+
+def test_jamba_period_structure():
+    cfg = get_config("jamba_1_5_large_398b")
+    attn_layers = [i for i in range(cfg.n_layers) if cfg.is_attn_layer(i)]
+    assert len(attn_layers) == cfg.n_layers // 8      # 1:7 interleave
+    moe_layers = [i for i in range(cfg.n_layers) if cfg.is_moe_layer(i)]
+    assert len(moe_layers) == cfg.n_layers // 2       # MoE every 2nd
+
+
+def test_padded_vocab_divisible():
+    for arch, cfg in all_configs().items():
+        assert cfg.padded_vocab() % 16 == 0, arch

@@ -1,0 +1,64 @@
+"""Router unit tests: top-k selection, padding masks, aux-free bias."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoEConfig
+from repro.core.routing import (RouterParams, route, router_init,
+                                update_aux_free_bias)
+
+
+def _setup(e_real=6, e_pad=8, k=2, t=32, d=16, bias=True, seed=0):
+    moe = MoEConfig(n_experts=e_real, top_k=k, d_expert=4)
+    key = jax.random.PRNGKey(seed)
+    p = router_init(d, e_pad, key, bias)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (t, d))
+    return moe, p, x
+
+
+def test_topk_valid_and_masked():
+    moe, p, x = _setup()
+    out = route(moe, p, x, 6)
+    assert out.top_idx.shape == (32, 2)
+    assert int(out.top_idx.max()) < 6          # padding experts never chosen
+    # weights normalised
+    np.testing.assert_allclose(np.asarray(out.top_w.sum(-1)), 1.0, rtol=1e-3)
+
+
+def test_weights_from_unbiased_probs():
+    """Aux-free bias shifts selection but weights stay = probs of chosen."""
+    moe, p, x = _setup(bias=True)
+    p2 = p._replace(bias=p.bias.at[0].set(100.0))   # force expert 0 selection
+    out = route(moe, p2, x, 6)
+    assert bool((out.top_idx == 0).any(axis=1).all())
+    probs0 = np.asarray(out.probs[:, 0])
+    k0 = np.asarray(out.top_idx) == 0
+    w = np.asarray(out.top_w / jnp.maximum(
+        jnp.take_along_axis(out.probs, out.top_idx, 1).sum(-1, keepdims=True), 1e-9))
+    # chosen weight for expert 0 proportional to its UNbiased prob
+    tw = np.asarray(out.top_w)
+    for t in range(x.shape[0]):
+        sel = np.where(k0[t])[0]
+        assert len(sel) == 1
+        assert tw[t, sel[0]] < 1.0 or probs0[t] > 0.5
+
+
+def test_aux_loss_uniform_lower_than_skewed():
+    moe, p, x = _setup(bias=False, t=256)
+    out = route(moe, p, x, 6)
+    # force skew: all logits to one expert
+    w = p.w.at[:, 1:].set(-10.0)
+    out_skew = route(moe, p._replace(w=w), x, 6)
+    assert float(out_skew.aux_loss) > float(out.aux_loss)
+
+
+def test_bias_update_pushes_toward_uniform():
+    moe, p, x = _setup(bias=True, t=256)
+    w = p.w.at[:, 0].set(5.0)                  # expert 0 overloaded
+    p = p._replace(w=w)
+    out = route(moe, p, x, 6)
+    p2 = update_aux_free_bias(p, out, 6, lr=0.1)
+    assert float(p2.bias[0]) < float(p.bias[0])       # overloaded: bias down
+    load = jax.nn.one_hot(out.top_idx, 8).sum((0, 1))
+    under = int(jnp.argmin(load[:6]))
+    assert float(p2.bias[under]) > float(p.bias[under])
