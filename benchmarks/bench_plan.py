@@ -1,0 +1,137 @@
+"""ISSUE 1 microbenchmark: old (seed) Python-loop EPWorld dispatch command
+generation vs the vectorized plan-layer path, at fig15 scale (~50k cmds).
+
+The seed EPWorld.run computed slot assignment with an O(R*T*K) dict loop and
+built one TransferCmd object (+ one 128-bit pack) per command.  The plan
+layer computes the same slots/counts with one vectorized pass
+(repro.core.plan.make_world_plan) and packs the whole command stream as an
+(N, 4) uint32 array (repro.core.transport.fifo.pack_cmds) pushed through the
+bulk FIFO path.  Acceptance: >= 5x at fig15 scale.
+"""
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.transport import EPWorld, NetConfig
+from repro.core.transport.ep_executor import build_command_streams
+from repro.core.transport.fifo import FLAG_FENCE, Op, TransferCmd
+
+# fig15 pushes 50k descriptors; same command volume here: R*Tl*K = 50_000
+R, Tl, K, E, D = 4, 3125, 4, 32, 64
+
+
+def _routing(seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, E, size=(R, Tl, K)).astype(np.int32)
+
+
+# ------------------------- seed path (verbatim loop structure) -------------
+def gen_seed(top_idx: np.ndarray, capacity: int, n_channels: int = 8):
+    """The seed EPWorld.run dispatch path: dict-based slot assignment, then
+    one TransferCmd object + pack per write and per fence."""
+    eps = E // R
+    tb = D * 4
+    send0, recv0 = 0, Tl * tb
+    slot_of = np.zeros((R, Tl, K), np.int32)
+    counts: dict[tuple[int, int], int] = {}
+    for r in range(R):
+        for t in range(Tl):
+            for k in range(K):
+                e = int(top_idx[r, t, k])
+                c = counts.get((r, e), 0)
+                counts[(r, e)] = c + 1
+                slot_of[r, t, k] = c
+    out = []
+    for r in range(R):
+        for t in range(Tl):
+            for k in range(K):
+                e = int(top_idx[r, t, k])
+                dst, el = e // eps, e % eps
+                dst_off = recv0 + ((r * eps + el) * capacity
+                                   + int(slot_of[r, t, k])) * tb
+                ch = (t + k) % n_channels
+                out.append(TransferCmd(
+                    op=Op.WRITE, dst_rank=dst, channel=ch,
+                    src_off=send0 + t * tb, dst_off=dst_off,
+                    length=tb, value=el).pack())
+        for e in range(E):
+            c = counts.get((r, e), 0)
+            if not c:
+                continue
+            dst, el = e // eps, e % eps
+            out.append(TransferCmd(
+                op=Op.ATOMIC, dst_rank=dst, channel=e % n_channels,
+                src_off=0, dst_off=r * eps + el, length=0,
+                value=(el & 0x3F) | (min(c, 63) << 6),
+                flags=FLAG_FENCE).pack())
+    return np.stack(out)
+
+
+# ------------------------- plan path (vectorized) --------------------------
+def gen_plan(top_idx: np.ndarray, capacity: int, n_channels: int = 8):
+    """The shipped path: exactly what EPWorld.run executes."""
+    eps = E // R
+    tb = D * 4
+    send0, recv0 = 0, Tl * tb
+    ret0 = recv0 + R * eps * capacity * tb
+    cs = build_command_streams(top_idx, E, eps, capacity, tb, n_channels,
+                               send0, recv0, ret0)
+    return np.concatenate([cs.writes, cs.fences])
+
+
+def _time(fn, *args, iters=5):
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6        # median, us
+
+
+def main():
+    ti = _routing()
+    cap = Tl * K
+    # correctness first: both generators must produce the same command set
+    a, b = gen_seed(ti, cap), gen_plan(ti, cap)
+    assert a.shape == b.shape
+    order_a = np.lexsort(a.T)
+    order_b = np.lexsort(b.T)
+    np.testing.assert_array_equal(a[order_a], b[order_b])
+
+    n_cmds = len(a)
+    t_seed = _time(gen_seed, ti, cap, iters=3)
+    t_plan = _time(gen_plan, ti, cap)
+    emit(f"bench_plan/seed_loop_gen/cmds={n_cmds}", t_seed,
+         f"{n_cmds / t_seed:.2f}cmds_per_us")
+    emit(f"bench_plan/vectorized_gen/cmds={n_cmds}", t_plan,
+         f"{n_cmds / t_plan:.2f}cmds_per_us")
+    emit("bench_plan/speedup", t_seed / t_plan,
+         f"{t_seed / t_plan:.1f}x (acceptance: >=5x)")
+
+    # context: full EPWorld.run at a smaller (protocol-complete) scale
+    rng = np.random.default_rng(0)
+    Rs, Ts, Ks, Ds, Fs, Es = 4, 256, 4, 64, 64, 8
+    x = rng.standard_normal((Rs, Ts, Ds)).astype(np.float32)
+    ti2 = rng.integers(0, Es, size=(Rs, Ts, Ks)).astype(np.int32)
+    tw = rng.random((Rs, Ts, Ks)).astype(np.float32)
+    tw /= tw.sum(-1, keepdims=True)
+    wg = (rng.standard_normal((Es, Ds, Fs)) * 0.1).astype(np.float32)
+    wu = (rng.standard_normal((Es, Ds, Fs)) * 0.1).astype(np.float32)
+    wd = (rng.standard_normal((Es, Fs, Ds)) * 0.1).astype(np.float32)
+
+    def full_run():
+        w = EPWorld(n_ranks=Rs, n_experts=Es, top_k=Ks, d=Ds,
+                    capacity=Ts * Ks, net_cfg=NetConfig(mode="srd", seed=1))
+        return w.run(x, ti2, tw, wg, wu, wd)
+
+    out = full_run()
+    ref = EPWorld.oracle(x, ti2, tw, wg, wu, wd)
+    assert np.allclose(out, ref, rtol=1e-4, atol=1e-5)
+    emit(f"bench_plan/epworld_run_e2e/cmds={Rs * Ts * Ks * 2}",
+         _time(full_run, iters=3), "dispatch+combine+experts, srd")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,7 @@
 """Paper Fig. 16: sensitivity to EP degree (2/4/8) for LL and HT dispatch +
 combine on CPU-device meshes.  Run via benchmarks.run (8 devices)."""
 import jax
+import repro.compat  # noqa: F401  jax version shims
 from jax.sharding import AxisType
 
 from benchmarks.common import emit, timeit

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# CI entrypoint: install dev deps (best-effort in hermetic envs) and run the
+# tier-1 suite exactly as ROADMAP.md specifies.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# Dev extras (pytest, hypothesis).  Offline/hermetic containers already bake
+# in what they allow; a failed install must not fail CI — the conftest shim
+# skips property tests when hypothesis is absent.
+python -m pip install -e '.[dev]' 2>/dev/null \
+    || echo "ci.sh: pip install skipped (offline env); running with baked-in deps"
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -1,0 +1,92 @@
+"""jax version-portability shims (DESIGN.md §9).
+
+The repo is written against the modern jax API surface:
+
+- ``jax.shard_map(..., check_vma=...)``
+- ``jax.make_mesh(shape, names, axis_types=...)``
+- ``jax.sharding.AxisType``
+- ``jax.set_mesh(mesh)``
+- ``jax.lax.axis_size(name)``
+
+On older jax releases (e.g. 0.4.x) these are missing or spelled differently
+(``jax.experimental.shard_map.shard_map(check_rep=...)``, no ``axis_types``
+kwarg, ``with mesh:`` instead of ``set_mesh``).  Importing this module
+installs equivalents onto the jax namespace so call sites stay written
+against the modern API; on new jax every patch is skipped.  Modules that use
+any of the APIs above import this first; tests do it once in conftest.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+import jax.sharding as _jsh
+
+# --------------------------------------------------------------- AxisType --
+if not hasattr(_jsh, "AxisType"):
+    class _AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    _jsh.AxisType = _AxisType
+
+AxisType = _jsh.AxisType
+
+# --------------------------------------------------------------- make_mesh --
+_orig_make_mesh = getattr(jax, "make_mesh", None)
+if (_orig_make_mesh is None
+        or "axis_types" not in inspect.signature(_orig_make_mesh).parameters):
+    def _make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        del axis_types  # old jax: every axis behaves as Auto under shard_map
+        if _orig_make_mesh is not None:
+            return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+        import math
+
+        import numpy as np
+        devs = list(devices) if devices is not None else jax.devices()
+        n = math.prod(axis_shapes)
+        return _jsh.Mesh(np.asarray(devs[:n]).reshape(axis_shapes),
+                         axis_names)
+
+    jax.make_mesh = _make_mesh
+
+make_mesh = jax.make_mesh
+
+# --------------------------------------------------------------- shard_map --
+if not hasattr(jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def _compat_shard_map(f, *, mesh, in_specs, out_specs, check_vma=True,
+                          **kw):
+        # check_vma (varying-manual-axes check) maps onto the old
+        # replication-rule check; both default-on, both safe to disable.
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=bool(check_vma),
+                          **kw)
+
+    jax.shard_map = _compat_shard_map
+
+shard_map = jax.shard_map
+
+# --------------------------------------------------------------- axis_size --
+from jax import lax as _lax
+
+if not hasattr(_lax, "axis_size"):
+    def _axis_size(axis_name):
+        # classic idiom: psum of a literal 1 constant-folds to the (static)
+        # named-axis size at trace time
+        return _lax.psum(1, axis_name)
+
+    _lax.axis_size = _axis_size
+
+# ---------------------------------------------------------------- set_mesh --
+if not hasattr(jax, "set_mesh"):
+    def _set_mesh(mesh):
+        # old jax: Mesh is itself the thread-local-mesh context manager
+        return mesh
+
+    jax.set_mesh = _set_mesh
+
+set_mesh = jax.set_mesh

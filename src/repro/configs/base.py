@@ -29,6 +29,9 @@ class MoEConfig:
     ll_capacity_factor: float = 4.0    # decode (LL) capacity factor
     router_aux_free_bias: bool = True  # DeepSeek aux-loss-free balancing bias
     aux_loss_weight: float = 1e-2      # Switch-style load-balance loss weight
+    # EP transport backend (repro.core.backend registry): "jax_collectives"
+    # (XLA a2a path) | "simulated_rdma" (host transport-substrate reference)
+    ep_backend: str = "jax_collectives"
 
     @property
     def enabled(self) -> bool:

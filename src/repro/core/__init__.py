@@ -1,10 +1,19 @@
-"""UCCL-EP core: routing, dispatch/combine (LL/HT), transport substrate."""
+"""UCCL-EP core: routing, dispatch planning, dispatch/combine (LL/HT),
+pluggable transport backends, transport substrate."""
+from repro.core.backend import (EPBackend, available_backends, get_backend,
+                                register_backend)
 from repro.core.ep import (EPSpec, DispatchResult, dispatch_combine_ht,
                            dispatch_combine_ll, moe_ref)
 from repro.core.moe import moe_apply, moe_init, padded_experts_static
+from repro.core.plan import (DispatchPlan, WorldPlan, dedup_entry_table,
+                             dedup_first, flat_slots, group_counts, make_plan,
+                             make_world_plan, rank_in_group)
 from repro.core.routing import RouterOut, RouterParams, route, router_init
 
 __all__ = ["EPSpec", "DispatchResult", "dispatch_combine_ht",
            "dispatch_combine_ll", "moe_ref", "moe_apply", "moe_init",
            "padded_experts_static", "RouterOut", "RouterParams", "route",
-           "router_init"]
+           "router_init", "EPBackend", "available_backends", "get_backend",
+           "register_backend", "DispatchPlan", "WorldPlan",
+           "dedup_entry_table", "dedup_first", "flat_slots", "group_counts",
+           "make_plan", "make_world_plan", "rank_in_group"]

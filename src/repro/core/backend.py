@@ -1,0 +1,136 @@
+"""Pluggable EP transport backends behind one dispatch/combine seam.
+
+UCCL-EP's portability claim (paper §1) is that the *same* EP protocol runs
+over heterogeneous transports.  This module is that seam for the repo: every
+backend consumes the shared dispatch plans (:mod:`repro.core.plan`) and
+implements
+
+    ``dispatch_combine(spec, x, top_idx, top_w, expert_fn) -> DispatchResult``
+
+where ``expert_fn`` has the standard grouped contract — it maps a stacked
+row-block buffer ``(n_expert_blocks, N, D)`` to outputs of the same shape,
+applying expert block i to rows i (for ``jax_collectives`` the blocks are
+the calling shard's local experts; for host backends they are all
+``spec.n_experts`` global experts).
+
+Registered backends:
+
+- ``jax_collectives``: the XLA path — capacity-bucketed ``all_to_all`` over
+  the EP mesh axes, LL or HT per ``spec.mode``.  Runs inside ``shard_map``.
+- ``simulated_rdma``: the transport-substrate path — numpy host execution
+  over FIFO channels, CPU proxies and the ordered/unordered network model
+  (:class:`repro.core.transport.ep_executor.EPWorld`).  Bit-level protocol
+  reference; also the cross-check oracle for routing equivalence tests.
+
+Future PRs add backends (ragged a2a, cross-DC hybrid, ...) by registering a
+new name here; routing logic never needs re-touching (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Protocol, runtime_checkable
+
+import numpy as np
+
+
+@runtime_checkable
+class EPBackend(Protocol):
+    """One EP transport implementation behind the dispatch/combine seam."""
+
+    name: str
+    # True: runs on traced jax arrays inside the EP shard_map island.
+    # False: host backend (concrete numpy arrays, outside jit) — the moe
+    # layer routes these generically, no per-name special cases.
+    jit_compatible: bool
+
+    def dispatch_combine(self, spec, x, top_idx, top_w, expert_fn):
+        """x: (T, D); top_idx/top_w: (T, K) -> DispatchResult."""
+        ...
+
+
+_REGISTRY: Dict[str, Callable[..., EPBackend]] = {}
+
+
+def register_backend(name: str):
+    """Class/factory decorator: ``@register_backend("my_transport")``."""
+    def deco(factory):
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def get_backend(name: str, **kwargs) -> EPBackend:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown EP backend {name!r}; "
+                       f"available: {available_backends()}")
+    return _REGISTRY[name](**kwargs)
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# ===================================================== jax collectives ====
+@register_backend("jax_collectives")
+class JaxCollectivesBackend:
+    """The shard_map path: one-shot LL or chunked/dedup'd HT dispatch over
+    ``jax.lax`` collectives, selected by ``spec.mode``.  Must be called
+    inside the EP ``shard_map`` island (it sees per-shard arrays)."""
+
+    name = "jax_collectives"
+    jit_compatible = True
+
+    def dispatch_combine(self, spec, x, top_idx, top_w, expert_fn):
+        from repro.core.ep import dispatch_combine_ht, dispatch_combine_ll
+        fn = dispatch_combine_ll if spec.mode == "ll" else dispatch_combine_ht
+        return fn(spec, x, top_idx, top_w, expert_fn)
+
+
+# ===================================================== simulated RDMA =====
+@register_backend("simulated_rdma")
+class SimulatedRDMABackend:
+    """Host-side reference backend over the transport substrate.
+
+    Simulates ``spec.degree`` ranks in-process: tokens are split row-major
+    across ranks, dispatched as batched TransferCmd streams through FIFO
+    channels + CPU proxies over the (ordered RC / unordered SRD) network
+    model, and combined with per-token weighted reduce at the source.
+
+    Capacity is lossless (``T_local * K`` slots per (src, expert) bucket),
+    so with a jax spec whose capacity factor avoids drops the two backends
+    must agree exactly on the same routing table.  ``expert_fn`` must cover
+    all ``spec.n_experts`` global experts: ``(E, N, D) -> (E, N, D)``.
+    """
+
+    name = "simulated_rdma"
+    jit_compatible = False
+
+    def __init__(self, net_cfg=None, n_channels: int = 8):
+        from repro.core.transport.simulator import NetConfig
+        self.net_cfg = net_cfg or NetConfig(mode="srd", seed=0)
+        self.n_channels = n_channels
+        self.last_world = None      # exposed for stats/introspection
+
+    def dispatch_combine(self, spec, x, top_idx, top_w, expert_fn):
+        from repro.core.ep import DispatchResult
+        from repro.core.transport.ep_executor import EPWorld
+
+        x = np.asarray(x, np.float32)
+        top_idx = np.asarray(top_idx)
+        top_w = np.asarray(top_w, np.float32)
+        T, D = x.shape
+        K = top_idx.shape[1]
+        R = spec.degree
+        assert T % R == 0, f"token count {T} not divisible by EP degree {R}"
+        Tl = T // R
+
+        def global_expert_fn(toks):
+            out = expert_fn(toks)
+            return np.asarray(out, np.float32)
+
+        world = EPWorld(n_ranks=R, n_experts=spec.n_experts, top_k=K, d=D,
+                        capacity=Tl * K, net_cfg=self.net_cfg,
+                        n_channels=self.n_channels)
+        out = world.run(x.reshape(R, Tl, D), top_idx.reshape(R, Tl, K),
+                        top_w.reshape(R, Tl, K), expert_fn=global_expert_fn)
+        self.last_world = world
+        return DispatchResult(out.reshape(T, D), {"dropped": np.float32(0.0)})

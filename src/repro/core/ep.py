@@ -17,6 +17,12 @@ All functions below run INSIDE ``shard_map`` — they see per-shard arrays and
 use ``jax.lax`` collectives over the EP mesh axes.  ``repro.core.moe`` wraps
 them; pure-jnp oracles live in :func:`moe_ref` for tests.
 
+Routing *decisions* (slot assignment, counts, capacity masks, dedup tables)
+come from the shared plan layer in :mod:`repro.core.plan`; this module only
+implements their *execution* over jax collectives (payload packing, a2a,
+grouped FFN, combine).  The simulated-RDMA transport executor consumes the
+same plans, so the two backends cannot drift (DESIGN.md §8).
+
 Shapes are static (XLA): capacity-bucketed buffers with overflow *drops*,
 which are counted and returned (the paper's incast/congestion concern maps to
 capacity pressure here; see DESIGN.md §6).
@@ -31,6 +37,8 @@ from typing import Callable, NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+from repro.core import plan as planlib
 
 Array = jax.Array
 
@@ -48,6 +56,7 @@ class EPSpec:
     capacity_factor: float = 2.0
     chunks: int = 1              # HT pipeline chunks
     dtype: jnp.dtype = jnp.bfloat16
+    mode: str = "ht"             # "ll" (decode) | "ht" (train/prefill)
 
     @property
     def degree(self) -> int:
@@ -79,20 +88,6 @@ def _cap(n: float, cf: float, hard_max: int, multiple: int = 8) -> int:
     return max(floor, min(c, hard_max))
 
 
-def _rank_in_group(group_id: Array, n_groups: int, valid: Array) -> Array:
-    """rank of each row within its group, counting only valid rows.
-
-    group_id: (N,) int32 in [0, n_groups); valid: (N,) bool.
-    Returns (N,) int32 rank (arrival order).  O(N * G) one-hot cumsum — N and
-    G are small per shard (T*K <= ~32k, G <= 64).
-    """
-    oh = jax.nn.one_hot(jnp.where(valid, group_id, n_groups), n_groups + 1,
-                        dtype=jnp.int32)
-    ranks = jnp.cumsum(oh, axis=0) - oh
-    return jnp.take_along_axis(
-        ranks, jnp.where(valid, group_id, n_groups)[:, None], axis=1)[:, 0]
-
-
 # =========================================================== LL mode ======
 def dispatch_combine_ll(spec: EPSpec, x: Array, top_idx: Array, top_w: Array,
                         expert_fn: Callable[[Array], Array],
@@ -109,11 +104,11 @@ def dispatch_combine_ll(spec: EPSpec, x: Array, top_idx: Array, top_w: Array,
     # expert more than once (e.g. random tables in tests)
     C = capacity or _cap(T * K / E, spec.capacity_factor, hard_max=T * K)
 
+    pl = planlib.make_plan(top_idx, E, C)
     flat_e = top_idx.reshape(-1)                       # (T*K,)
-    valid = flat_e >= 0
-    rank = _rank_in_group(flat_e, E, valid)            # (T*K,)
-    keep = valid & (rank < C)
-    slot = jnp.where(keep, flat_e * C + rank, E * C)   # overflow -> scratch row
+    valid, rank = pl.valid.reshape(-1), pl.rank.reshape(-1)
+    keep = pl.keep.reshape(-1)
+    slot = planlib.flat_slots(flat_e, rank, keep, C, E)  # overflow -> scratch
 
     # index-indirection packing (scatter ids, gather payloads; §Perf O2)
     rows = jnp.arange(T * K, dtype=jnp.int32) // K
@@ -140,7 +135,7 @@ def dispatch_combine_ll(spec: EPSpec, x: Array, top_idx: Array, top_w: Array,
                          0).reshape(T, K, D)
     out = jnp.einsum("tkd,tk->td", gathered.astype(jnp.float32),
                      top_w.astype(jnp.float32))
-    dropped = (valid & ~keep).sum() / jnp.maximum(valid.sum(), 1)
+    dropped = pl.n_dropped / jnp.maximum(valid.sum(), 1)
     return DispatchResult(out.astype(x.dtype), {"dropped": dropped})
 
 
@@ -167,25 +162,13 @@ def _dedup_group_dispatch(x: Array, eid: Array, w: Array, group_of: Array,
     T, K = eid.shape
     D = x.shape[1]
     valid = eid >= 0
-    # first occurrence of each (token, group) across k
-    same = group_of[:, :, None] == group_of[:, None, :]        # (T, K, K)
-    earlier = jnp.tril(jnp.ones((K, K), bool), -1)[None]
-    first = valid & ~jnp.any(same & earlier & valid[:, None, :], axis=2)
-    # (token, group) entry table: (T, G) valid + rank within group
-    entry_valid = jnp.zeros((T, n_groups), bool).at[
-        jnp.arange(T)[:, None], jnp.where(valid, group_of, 0)].max(
-        first, mode="drop")
-    flat_g = jnp.where(first, group_of, -1).reshape(-1)
-    rank_flat = _rank_in_group(flat_g, n_groups, flat_g >= 0)   # (T*K,)
-    # per (t, g): rank of its first entry
-    rank_tg = jnp.zeros((T, n_groups), jnp.int32).at[
-        jnp.arange(T)[:, None], jnp.where(first, group_of, 0)].max(
-        jnp.where(first, rank_flat.reshape(T, K), 0), mode="drop")
-    keep_tg = entry_valid & (rank_tg < C)
+    # dedup + (token, group) entry table from the shared plan layer
+    first, entry_valid, rank_tg, keep_tg, dropped = planlib.dedup_entry_table(
+        group_of, valid, n_groups, C)
     # pack entries by index-indirection: scatter row ids, gather payloads
     # once per (t, g) — no (T, G, D) value materialisation (§Perf O2)
-    slot_tg = jnp.where(keep_tg, jnp.arange(n_groups)[None] * C + rank_tg,
-                        n_groups * C)
+    slot_tg = planlib.flat_slots(jnp.arange(n_groups)[None], rank_tg, keep_tg,
+                                 C, n_groups)
     src_rows = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[:, None],
                                 (T, n_groups))
     src_of_slot = jnp.full((n_groups * C + 1,), T, jnp.int32).at[slot_tg].set(
@@ -202,7 +185,6 @@ def _dedup_group_dispatch(x: Array, eid: Array, w: Array, group_of: Array,
     send_w = jnp.zeros((n_groups * C + 1, K), jnp.float32).at[
         slot_choice, kpos].set(jnp.where(valid, w.astype(jnp.float32), 0.0),
                                mode="drop")[:-1]
-    dropped = (entry_valid & ~keep_tg).sum()
     return _GroupPlan(send_x, send_eid.reshape(n_groups, C, K),
                       send_w.reshape(n_groups, C, K),
                       jnp.where(keep_tg, rank_tg, -1), keep_tg, dropped)
@@ -231,11 +213,11 @@ def _expert_apply(spec: EPSpec, x_in: Array, eid: Array, w: Array,
     K = eid.shape[1]
     eps = spec.experts_per_shard
     Ce = _cap(n_tokens_hint * K / eps, cf, hard_max=N * K)
+    pl = planlib.make_plan(eid, eps, Ce)
     flat_e = eid.reshape(-1)
-    valid = flat_e >= 0
-    rank = _rank_in_group(flat_e, eps, valid)
-    keep = valid & (rank < Ce)
-    slot = jnp.where(keep, flat_e * Ce + rank, eps * Ce)
+    valid, rank, keep = (pl.valid.reshape(-1), pl.rank.reshape(-1),
+                         pl.keep.reshape(-1))
+    slot = planlib.flat_slots(flat_e, rank, keep, Ce, eps)
     rows = jnp.arange(N * K, dtype=jnp.int32) // K          # choice -> entry
     # index scatter (ints) + payload gather
     ent_of_slot = jnp.full((eps * Ce + 1,), N, jnp.int32).at[slot].set(

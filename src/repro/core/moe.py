@@ -10,13 +10,14 @@ import math
 from functools import partial
 from typing import Optional
 
+import repro.compat  # noqa: F401  jax version shims (jax.shard_map)
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, _round_up
-from repro.core import ep as ep_mod
-from repro.core.ep import EPSpec, dispatch_combine_ht, dispatch_combine_ll, moe_ref
+from repro.core.backend import get_backend
+from repro.core.ep import EPSpec, moe_ref
 from repro.core.routing import RouterParams, route, router_init
 from repro.distributed.sharding import DistCtx
 from repro.kernels import ops as kops
@@ -65,18 +66,30 @@ def make_ep_spec(cfg: ModelConfig, dist: DistCtx, *, mode: str,
           else cfg.moe.capacity_factor)
     return EPSpec(axes=tuple(dist.ep_axes), sizes=sizes,
                   n_experts=padded_experts_static(cfg), top_k=cfg.moe.top_k,
-                  capacity_factor=cf, chunks=chunks, dtype=dtype)
+                  capacity_factor=cf, chunks=chunks, dtype=dtype,
+                  mode=("ll" if mode == "ll" else "ht"))
 
 
 def moe_apply(cfg: ModelConfig, dist: Optional[DistCtx], p: dict, x: Array,
-              *, mode: str = "ht", chunks: int = 1) -> tuple[Array, dict]:
-    """x: (B, S, D) -> (y, aux).  mode: "ht" | "ll" | "ref"."""
+              *, mode: str = "ht", chunks: int = 1,
+              backend: Optional[str] = None) -> tuple[Array, dict]:
+    """x: (B, S, D) -> (y, aux).  mode: "ht" | "ll" | "ref".
+
+    ``backend`` (default ``cfg.moe.ep_backend``) selects the EP transport
+    from the :mod:`repro.core.backend` registry.  ``simulated_rdma`` is a
+    host-side reference path (numpy over the transport substrate) — valid
+    outside ``jit`` only, for protocol cross-checks and debugging.
+    """
     B, S, D = x.shape
     mcfg = cfg.moe
     e_pad = p["w_gate"].shape[0]
     rparams = RouterParams(w=p["router_w"], bias=p.get("router_b"))
+    # fail loud on unknown names (get_backend raises), never fall back
+    ep_be = get_backend(backend or mcfg.ep_backend)
 
-    if dist is None or not dist.ep_axes or mode == "ref":
+    if not ep_be.jit_compatible and mode != "ref":
+        y, aux = _moe_host_sim(cfg, dist, rparams, p, x, mode, ep_be)
+    elif dist is None or not dist.ep_axes or mode == "ref":
         t = x.reshape(-1, D)
         rout = route(mcfg, rparams, t, mcfg.n_experts)
         y = moe_ref(t, rout.top_idx, rout.top_w, p["w_gate"], p["w_up"],
@@ -85,7 +98,7 @@ def moe_apply(cfg: ModelConfig, dist: Optional[DistCtx], p: dict, x: Array,
                "load": jax.nn.one_hot(rout.top_idx, e_pad).sum((0, 1))}
         y = y.reshape(B, S, D)
     else:
-        y, aux = _moe_dist(cfg, dist, rparams, p, x, mode, chunks)
+        y, aux = _moe_dist(cfg, dist, rparams, p, x, mode, chunks, ep_be)
 
     if mcfg.d_shared and "shared" in p:
         sh = MLPParams(**{k: p["shared"][k] for k in ("w_gate", "w_up", "w_down")})
@@ -93,8 +106,42 @@ def moe_apply(cfg: ModelConfig, dist: Optional[DistCtx], p: dict, x: Array,
     return y, aux
 
 
+def _moe_host_sim(cfg: ModelConfig, dist: Optional[DistCtx],
+                  rparams: RouterParams, p: dict, x: Array,
+                  mode: str, ep_be) -> tuple[Array, dict]:
+    """Host-backend path: run the MoE layer's dispatch/combine on concrete
+    numpy arrays (e.g. the simulated-RDMA substrate; outside jit only)."""
+    import numpy as np
+
+    from repro.core.transport.ep_executor import np_grouped_swiglu
+
+    B, S, D = x.shape
+    mcfg = cfg.moe
+    t = x.reshape(-1, D)
+    rout = route(mcfg, rparams, t, mcfg.n_experts)
+    e_pad = p["w_gate"].shape[0]
+    if dist is not None and dist.ep_axes:
+        spec = make_ep_spec(cfg, dist, mode=mode, dtype=x.dtype)
+    else:
+        degree = max(d for d in (1, 2, 4) if (B * S) % d == 0
+                     and e_pad % d == 0)
+        spec = EPSpec(axes=("sim",), sizes=(degree,), n_experts=e_pad,
+                      top_k=mcfg.top_k, mode=mode)
+    wg, wu, wd = (np.asarray(p[k], np.float32)
+                  for k in ("w_gate", "w_up", "w_down"))
+    res = ep_be.dispatch_combine(
+        spec, np.asarray(t, np.float32), np.asarray(rout.top_idx),
+        np.asarray(rout.top_w, np.float32),
+        lambda toks: np_grouped_swiglu(toks, wg, wu, wd))
+    aux = {"aux_loss": rout.aux_loss,
+           "dropped": jnp.float32(res.aux["dropped"]),
+           "load": jax.nn.one_hot(rout.top_idx, e_pad).sum((0, 1))}
+    return jnp.asarray(res.out, x.dtype).reshape(B, S, D), aux
+
+
 def _moe_dist(cfg: ModelConfig, dist: DistCtx, rparams: RouterParams, p: dict,
-              x: Array, mode: str, chunks: int) -> tuple[Array, dict]:
+              x: Array, mode: str, chunks: int, ep_backend) -> tuple[Array,
+                                                                     dict]:
     mesh = dist.mesh
     all_axes = tuple(mesh.axis_names)
     mcfg = cfg.moe
@@ -115,10 +162,8 @@ def _moe_dist(cfg: ModelConfig, dist: DistCtx, rparams: RouterParams, p: dict,
         t = x_l.reshape(-1, D)
         rout = route(mcfg, RouterParams(rw, rb), t, mcfg.n_experts)
         fn = _expert_fn(wg, wu, wd)
-        if mode == "ll":
-            res = dispatch_combine_ll(spec, t, rout.top_idx, rout.top_w, fn)
-        else:
-            res = dispatch_combine_ht(spec, t, rout.top_idx, rout.top_w, fn)
+        res = ep_backend.dispatch_combine(spec, t, rout.top_idx, rout.top_w,
+                                          fn)
         y = res.out.reshape(Bl, Sl, D)
         denom = jnp.float32(nshards)
         aux = {

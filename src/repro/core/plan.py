@@ -1,0 +1,209 @@
+"""Backend-agnostic EP dispatch planning (DESIGN.md §8).
+
+UCCL-EP separates token-routing *decisions* (compact commands) from transport
+*execution* (collectives, CPU proxies issuing RDMA).  This module is the
+decision half, shared by every backend: given a routing table it computes
+
+- **slot assignment**: arrival-order rank of each choice within its
+  destination group (the receive-buffer slot a real TransferCmd addresses),
+- **per-group counts** (the fence/atomic expected-write counts),
+- **capacity keep/drop masks** (static-shape overflow policy),
+- **per-(token, group) dedup tables** (HT mode: a token crosses each group
+  boundary once, carrying its expert list as metadata).
+
+Everything is fully vectorized and dual-dialect: numpy arrays take a
+sort-based O(N log N) path (host planning for the simulated-RDMA transport),
+jax arrays — including tracers inside ``jit``/``shard_map`` — take a one-hot
+cumsum path that XLA fuses well.  Both dialects produce bit-identical plans,
+so the jax-collectives path (``repro.core.ep``) and the transport executor
+(``repro.core.transport.ep_executor``) can never drift: they *are* the same
+routing logic.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import numpy as np
+
+Array = Any  # np.ndarray | jax.Array (incl. tracers)
+
+
+def _is_np(a: Array) -> bool:
+    return isinstance(a, (np.ndarray, np.generic))
+
+
+def _xp(a: Array):
+    """Array-namespace dispatch: numpy for numpy inputs, jnp otherwise."""
+    if _is_np(a):
+        return np
+    import jax.numpy as jnp  # lazy: keep numpy-only consumers jax-free
+    return jnp
+
+
+# ------------------------------------------------------- slot assignment --
+def rank_in_group(group_id: Array, n_groups: int, valid: Array) -> Array:
+    """Arrival-order rank of each row within its group (valid rows only).
+
+    group_id: (N,) int32 in [0, n_groups); valid: (N,) bool.
+    Returns (N,) int32; rank is meaningless (but in-range) for invalid rows.
+    """
+    if _is_np(group_id):
+        return _rank_in_group_np(group_id, n_groups, valid)
+    return _rank_in_group_jnp(group_id, n_groups, valid)
+
+
+def _rank_in_group_np(group_id: np.ndarray, n_groups: int,
+                      valid: np.ndarray) -> np.ndarray:
+    n = group_id.size
+    gid = np.where(valid, group_id, n_groups).astype(np.int64)
+    order = np.argsort(gid, kind="stable")       # arrival order within group
+    sg = gid[order]
+    is_start = np.empty(n, bool)
+    if n:
+        is_start[0] = True
+        np.not_equal(sg[1:], sg[:-1], out=is_start[1:])
+    run = np.cumsum(is_start) - 1
+    start = np.flatnonzero(is_start)
+    rank_sorted = np.arange(n, dtype=np.int64) - start[run] if n else start
+    rank = np.empty(n, np.int32)
+    rank[order] = rank_sorted.astype(np.int32)
+    return rank
+
+
+def _rank_in_group_jnp(group_id: Array, n_groups: int, valid: Array) -> Array:
+    import jax
+    import jax.numpy as jnp
+    # O(N * G) one-hot cumsum — N and G are small per shard
+    # (T*K <= ~32k, G <= 64), and XLA fuses this into one pass.
+    oh = jax.nn.one_hot(jnp.where(valid, group_id, n_groups), n_groups + 1,
+                        dtype=jnp.int32)
+    ranks = jnp.cumsum(oh, axis=0) - oh
+    return jnp.take_along_axis(
+        ranks, jnp.where(valid, group_id, n_groups)[:, None], axis=1)[:, 0]
+
+
+def group_counts(group_id: Array, n_groups: int, valid: Array) -> Array:
+    """Number of valid rows per group: (n_groups,) int32."""
+    if _is_np(group_id):
+        flat = group_id.reshape(-1)[valid.reshape(-1)]
+        return np.bincount(flat, minlength=n_groups).astype(np.int32)
+    import jax.numpy as jnp
+    gid = jnp.where(valid, group_id, n_groups).reshape(-1)
+    return jnp.zeros((n_groups + 1,), jnp.int32).at[gid].add(1)[:n_groups]
+
+
+def flat_slots(group_id: Array, rank: Array, keep: Array, capacity: int,
+               n_groups: int) -> Array:
+    """Flat receive-slot index ``g * capacity + rank`` for kept entries;
+    dropped/invalid entries point at the scratch slot ``n_groups*capacity``."""
+    xp = _xp(group_id)
+    return xp.where(keep, group_id * capacity + rank, n_groups * capacity)
+
+
+# -------------------------------------------------------------- full plan --
+class DispatchPlan(NamedTuple):
+    """Routing decisions for one shard's (T, K) table over ``n_groups``."""
+
+    rank: Array       # (T, K) arrival-order rank per (row, group)
+    counts: Array     # (n_groups,) valid choices per group
+    valid: Array      # (T, K) bool: group id >= 0
+    keep: Array       # (T, K) valid & rank < capacity
+    n_dropped: Array  # scalar int: valid choices lost to capacity
+
+
+def make_plan(group_idx: Array, n_groups: int, capacity: int) -> DispatchPlan:
+    """Plan a (T, K) routing table: group ids in [0, n_groups), -1 = pad."""
+    valid = group_idx >= 0
+    flat = group_idx.reshape(-1)
+    fv = valid.reshape(-1)
+    rank = rank_in_group(flat, n_groups, fv).reshape(group_idx.shape)
+    counts = group_counts(flat, n_groups, fv)
+    keep = valid & (rank < capacity)
+    n_dropped = (valid & ~keep).sum()
+    return DispatchPlan(rank, counts, valid, keep, n_dropped)
+
+
+class WorldPlan(NamedTuple):
+    """Per-rank plans for a whole (R, T, K) world, computed in one pass.
+
+    Slot namespaces are per (source rank, expert): rank r's choices for
+    expert e occupy slots [0, counts[r, e]) of the (r, e) receive bucket —
+    exactly the paper's sender-side slot metadata.
+    """
+
+    rank: Array       # (R, T, K) arrival-order slot per (src, expert)
+    counts: Array     # (R, n_groups)
+    valid: Array      # (R, T, K)
+    keep: Array       # (R, T, K)
+    n_dropped: Array  # scalar
+
+
+def make_world_plan(group_idx: Array, n_groups: int,
+                    capacity: int) -> WorldPlan:
+    """Plan an (R, T, K) table; groups are independent per source rank."""
+    R = group_idx.shape[0]
+    valid = group_idx >= 0
+    xp = _xp(group_idx)
+    # offset group ids per rank so one rank_in_group pass covers all ranks
+    r_of = xp.arange(R, dtype=group_idx.dtype).reshape(
+        (R,) + (1,) * (group_idx.ndim - 1))
+    gid = xp.where(valid, group_idx + r_of * n_groups, -1)
+    flat, fv = gid.reshape(-1), valid.reshape(-1)
+    rank = rank_in_group(flat, R * n_groups, fv).reshape(group_idx.shape)
+    counts = group_counts(flat, R * n_groups, fv).reshape(R, n_groups)
+    keep = valid & (rank < capacity)
+    n_dropped = (valid & ~keep).sum()
+    return WorldPlan(rank, counts, valid, keep, n_dropped)
+
+
+# ------------------------------------------------------------ dedup table --
+def dedup_first(group_of: Array, valid: Array) -> Array:
+    """First-occurrence mask per (token, group) across the K choices.
+
+    group_of: (T, K) destination group per choice (-1 pad); valid: (T, K).
+    Returns (T, K) bool: True iff choice k is the first valid choice of its
+    row routed to that group — HT mode sends exactly these entries; the
+    remaining (duplicate) choices ride along as metadata.
+    """
+    xp = _xp(group_of)
+    K = group_of.shape[-1]
+    same = group_of[:, :, None] == group_of[:, None, :]       # (T, K, K)
+    earlier = (xp.arange(K)[None, :, None] > xp.arange(K)[None, None, :])
+    return valid & ~xp.any(same & earlier & valid[:, None, :], axis=2)
+
+
+def dedup_entry_table(group_of: Array, valid: Array, n_groups: int,
+                      capacity: int):
+    """Dedup'd (token, group) entry table with capacity bucketing.
+
+    Returns ``(first, entry_valid, rank_tg, keep_tg, n_dropped)``:
+
+    - first:       (T, K) first-occurrence mask (see :func:`dedup_first`)
+    - entry_valid: (T, G) token has >= 1 choice routed to group g
+    - rank_tg:     (T, G) arrival-order rank of the (t, g) entry in group g
+    - keep_tg:     (T, G) entry fits under ``capacity``
+    - n_dropped:   scalar count of (t, g) entries lost to capacity
+    """
+    T, K = group_of.shape
+    first = dedup_first(group_of, valid)
+    if _is_np(group_of):
+        entry_valid = np.zeros((T, n_groups), bool)
+        rows = np.broadcast_to(np.arange(T)[:, None], (T, K))
+        entry_valid[rows[first], group_of[first]] = True
+        flat_g = np.where(first, group_of, -1).reshape(-1)
+        rank_flat = rank_in_group(flat_g, n_groups, flat_g >= 0).reshape(T, K)
+        rank_tg = np.zeros((T, n_groups), np.int32)
+        rank_tg[rows[first], group_of[first]] = rank_flat[first]
+    else:
+        import jax.numpy as jnp
+        rows = jnp.broadcast_to(jnp.arange(T)[:, None], (T, K))
+        entry_valid = jnp.zeros((T, n_groups), bool).at[
+            rows, jnp.where(valid, group_of, 0)].max(first, mode="drop")
+        flat_g = jnp.where(first, group_of, -1).reshape(-1)
+        rank_flat = rank_in_group(flat_g, n_groups, flat_g >= 0)
+        rank_tg = jnp.zeros((T, n_groups), jnp.int32).at[
+            rows, jnp.where(first, group_of, 0)].max(
+            jnp.where(first, rank_flat.reshape(T, K), 0), mode="drop")
+    keep_tg = entry_valid & (rank_tg < capacity)
+    n_dropped = (entry_valid & ~keep_tg).sum()
+    return first, entry_valid, rank_tg, keep_tg, n_dropped

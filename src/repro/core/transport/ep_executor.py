@@ -6,26 +6,115 @@ at the destination, per-token combine writes back, weighted reduce at the
 source — all over the unordered (SRD) or ordered (RC) network model, through
 128-bit FIFO channels and CPU proxies.
 
+Routing decisions (slot assignment, per-(src, expert) counts, capacity
+masks) come from the shared plan layer (:mod:`repro.core.plan`) — the same
+plans the jax-collectives path consumes — and are turned into *batched*
+TransferCmd streams: packed ``(N, 4)`` uint32 arrays pushed through the
+``Proxy.push_batch`` bulk FIFO path.  No per-command Python objects on the
+hot path (DESIGN.md §8).
+
 Tests prove protocol correctness (result == dense oracle under any delivery
 order); benchmarks reuse it for paper Figs. 7/15/17.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
+from typing import Callable, NamedTuple, Optional
 
 import numpy as np
 
-from repro.core.transport.fifo import FLAG_FENCE, Op, TransferCmd
+from repro.core import plan as planlib
+from repro.core.transport.fifo import FLAG_FENCE, Op, pack_cmds
 from repro.core.transport.proxy import Proxy, SymmetricMemory
 from repro.core.transport.simulator import Network, NetConfig
 
 F32 = np.dtype(np.float32)
 
 
+class CommandStreams(NamedTuple):
+    """Batched TransferCmd streams for one EP round, plus routing metadata.
+
+    Each stream is a packed (N, 4) uint32 descriptor array (invalid routing
+    entries already dropped) with parallel per-row ``*_pusher`` (the rank
+    whose proxy issues the command) and ``*_channel`` arrays."""
+
+    plan: planlib.WorldPlan
+    writes: np.ndarray          # dispatch data writes
+    write_pusher: np.ndarray
+    write_channel: np.ndarray
+    fences: np.ndarray          # one completion-fence atomic per (src, e)
+    fence_pusher: np.ndarray
+    fence_channel: np.ndarray
+    combines: np.ndarray        # combine writes back to the source
+    combine_pusher: np.ndarray
+    combine_channel: np.ndarray
+
+
+def build_command_streams(top_idx: np.ndarray, n_experts: int, eps: int,
+                          capacity: int, tok_bytes: int, n_channels: int,
+                          send0: int, recv0: int, ret0: int,
+                          ) -> CommandStreams:
+    """Vectorized LL-protocol command generation from a routing table.
+
+    The single source of truth for how plans become TransferCmd streams —
+    ``EPWorld.run`` executes exactly these; ``benchmarks/bench_plan.py``
+    times this function against the seed's Python loops.
+    """
+    ti = np.ascontiguousarray(top_idx, np.int64)
+    R, Tl, K = ti.shape
+    tb = tok_bytes
+    wp = planlib.make_world_plan(ti, n_experts, capacity)
+    valid = wp.valid.reshape(-1)
+
+    dst = ti // eps                                     # (R, Tl, K)
+    el = np.where(wp.valid, ti % eps, 0)
+    t_idx = np.arange(Tl, dtype=np.int64)[None, :, None]
+    k_idx = np.arange(K, dtype=np.int64)[None, None, :]
+    ch = np.broadcast_to((t_idx + k_idx) % n_channels, ti.shape)
+    src_off = np.broadcast_to(send0 + t_idx * tb, ti.shape)
+    # dispatch writes land in the (src, expert) receive bucket at the plan's
+    # arrival-order slot; combine writes come straight back from that bucket
+    # into the per-(token, choice) return slot
+    recv_off = recv0 + ((np.arange(R)[:, None, None] * eps + el) * capacity
+                        + wp.rank) * tb
+    ret_off = np.broadcast_to(ret0 + (t_idx * K + k_idx) * tb, ti.shape)
+    src_rank = np.broadcast_to(np.arange(R)[:, None, None], ti.shape)
+
+    writes = pack_cmds(int(Op.WRITE), dst, ch, src_off, recv_off, tb,
+                       el)[valid]
+    combines = pack_cmds(int(Op.WRITE), src_rank, ch, recv_off, ret_off, tb,
+                         0)[valid]
+    ch_flat = ch.reshape(-1)[valid]
+
+    r_f, e_f = np.nonzero(wp.counts > 0)
+    el_f = e_f % eps
+    fence_val = (el_f & 0x3F) | (np.minimum(wp.counts[r_f, e_f], 63) << 6)
+    fences = pack_cmds(int(Op.ATOMIC), e_f // eps, e_f % n_channels, 0,
+                       r_f * eps + el_f, 0, fence_val, FLAG_FENCE)
+
+    return CommandStreams(
+        plan=wp,
+        writes=writes, write_pusher=src_rank.reshape(-1)[valid],
+        write_channel=ch_flat,
+        fences=fences, fence_pusher=r_f, fence_channel=e_f % n_channels,
+        combines=combines, combine_pusher=dst.reshape(-1)[valid],
+        combine_channel=ch_flat)
+
+
 def np_swiglu(x: np.ndarray, wg, wu, wd) -> np.ndarray:
     g = x @ wg
     u = x @ wu
     return (g / (1 + np.exp(-g)) * u) @ wd
+
+
+def np_grouped_swiglu(tokens: np.ndarray, wg, wu, wd) -> np.ndarray:
+    """Vectorized grouped expert FFN: row block e of ``tokens`` (E, N, D)
+    goes through expert e's SwiGLU.  Same contract as the jax path's
+    ``expert_fn`` (kernels.ops.grouped_swiglu), in numpy."""
+    g = np.einsum("end,edf->enf", tokens, wg)
+    u = np.einsum("end,edf->enf", tokens, wu)
+    return np.einsum("enf,efd->end", g / (1 + np.exp(-g)) * u, wd)
 
 
 def _to_bytes(a: np.ndarray) -> np.ndarray:
@@ -42,8 +131,8 @@ class EPWorld:
     n_experts: int
     top_k: int
     d: int
-    f: int
-    capacity: int
+    f: int = 0                  # expert hidden dim (only for the wg/wu/wd path)
+    capacity: int = 0
     net_cfg: NetConfig = field(default_factory=NetConfig)
     n_channels: int = 8
     n_threads: int = 4
@@ -58,125 +147,118 @@ class EPWorld:
         self.mems: list[SymmetricMemory] = []
 
     def run(self, x: np.ndarray, top_idx: np.ndarray, top_w: np.ndarray,
-            wg: np.ndarray, wu: np.ndarray, wd: np.ndarray) -> np.ndarray:
-        """x: (R, Tl, D); top_idx/top_w: (R, Tl, K); w*: (E, D, F)/(E, F, D)."""
+            wg: Optional[np.ndarray] = None, wu: Optional[np.ndarray] = None,
+            wd: Optional[np.ndarray] = None, *,
+            expert_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+            ) -> np.ndarray:
+        """x: (R, Tl, D); top_idx/top_w: (R, Tl, K); w*: (E, D, F)/(E, F, D).
+
+        Expert compute is either the built-in grouped SwiGLU over
+        ``wg/wu/wd`` or a caller-supplied ``expert_fn`` with the standard
+        backend contract: ``(n_experts, N, D) -> (n_experts, N, D)``, row
+        block e holding the tokens received by (global) expert e.
+        """
         R, Tl, D = x.shape
         K, C = self.top_k, self.capacity
-        tb = self.tok_bytes
+        E, eps, tb = self.n_experts, self.eps, self.tok_bytes
+        nc = self.n_channels
+        if expert_fn is None:
+            assert wg is not None and wu is not None and wd is not None
+            expert_fn = lambda toks: np_grouped_swiglu(toks, wg, wu, wd)  # noqa: E731
         send0 = 0
         recv0 = send0 + Tl * tb
-        ret0 = recv0 + R * self.eps * C * tb
+        ret0 = recv0 + R * eps * C * tb
         total = ret0 + Tl * K * tb
-        mems = [SymmetricMemory.create(total, n_counters=R * self.eps + R)
+        mems = [SymmetricMemory.create(total, n_counters=R * eps + R)
                 for _ in range(R)]
         proxies = [Proxy(r, self.net, mems[r], n_threads=self.n_threads,
-                         n_channels=self.n_channels,
+                         n_channels=nc,
                          ordered_transport=(self.net_cfg.mode == "rc"))
                    for r in range(R)]
         self.proxies, self.mems = proxies, mems
-
-        def push(r, ch, cmd):
-            # inline mode: back-pressure is relieved by draining the proxy
-            # (the paper's kMaxInflight pacing, §3.1) instead of blocking
-            if self.use_threads:
-                proxies[r].push(ch, cmd)
-                return
-            while proxies[r].push(ch, cmd, block=False) is None:
-                proxies[r].drain_inline()
-        self._push = push
         for r in range(R):
             mems[r].data[send0:send0 + Tl * tb] = _to_bytes(x[r])
 
-        # slot assignment: arrival order per (src, expert); the slot map is
-        # sender-side state (the metadata a real TransferCmd stream encodes)
-        slot_of = np.zeros((R, Tl, K), np.int32)
-        counts: dict[tuple[int, int], int] = {}
-        for r in range(R):
-            for t in range(Tl):
-                for k in range(K):
-                    e = int(top_idx[r, t, k])
-                    c = counts.get((r, e), 0)
-                    counts[(r, e)] = c + 1
-                    slot_of[r, t, k] = c
-        assert max(counts.values()) <= C, "capacity overflow in setup"
+        # slot assignment + command generation: arrival order per
+        # (src, expert) from the shared plan layer, packed as batched
+        # TransferCmd streams (the metadata a real command stream encodes)
+        cs = build_command_streams(top_idx, E, eps, C, tb, nc,
+                                   send0, recv0, ret0)
+        wp = cs.plan
+        assert int(wp.counts.max()) <= C, "capacity overflow in setup"
 
-        # ------------------------- dispatch ------------------------------
-        for r in range(R):
-            for t in range(Tl):
-                for k in range(K):
-                    e = int(top_idx[r, t, k])
-                    dst, el = e // self.eps, e % self.eps
-                    dst_off = recv0 + ((r * self.eps + el) * C
-                                       + int(slot_of[r, t, k])) * tb
-                    ch = (t + k) % self.n_channels
-                    push(r, ch, TransferCmd(
-                        op=Op.WRITE, dst_rank=dst, channel=ch,
-                        src_off=send0 + t * tb, dst_off=dst_off,
-                        length=tb, value=el))
-            for e in range(self.n_experts):
-                c = counts.get((r, e), 0)
-                if not c:
-                    continue
-                dst, el = e // self.eps, e % self.eps
-                push(r, e % self.n_channels, TransferCmd(
-                    op=Op.ATOMIC, dst_rank=dst, channel=e % self.n_channels,
-                    src_off=0, dst_off=r * self.eps + el, length=0,
-                    value=(el & 0x3F) | (min(c, 63) << 6), flags=FLAG_FENCE))
+        self._push_grouped(cs.writes, cs.write_pusher, cs.write_channel)
+        self._push_grouped(cs.fences, cs.fence_pusher, cs.fence_channel)
         self._pump(proxies)
-        for r in range(R):          # every fence must have applied
-            for e in range(self.n_experts):
-                if counts.get((r, e), 0):
-                    dst, el = e // self.eps, e % self.eps
-                    assert mems[dst].counters[r * self.eps + el] == 1, (r, e)
+        for r, e in zip(*(a.tolist() for a in np.nonzero(wp.counts > 0))):
+            assert mems[e // eps].counters[r * eps + e % eps] == 1, (r, e)
 
-        # ------------------------- expert compute ------------------------
-        outs: dict[tuple[int, int], np.ndarray] = {}
-        for dst in range(R):
-            buf = _from_bytes(mems[dst].data[recv0:ret0], (R, self.eps, C, D))
-            for src in range(R):
-                for el in range(self.eps):
-                    e = dst * self.eps + el
-                    c = counts.get((src, e), 0)
-                    if c:
-                        outs[(src, e)] = np_swiglu(
-                            buf[src, el, :c], wg[e], wu[e], wd[e])
+        # -------------------- expert compute (one grouped call) -----------
+        # stack each destination's receive region into a global
+        # (E, R*c_max, D) buffer: expert e = dst*eps + el, row block per
+        # src.  Only the occupied slot prefix (c_max = fullest bucket) is
+        # computed — the rest of each capacity-C bucket is padding.
+        c_max = int(wp.counts.max())
+        if c_max:
+            bufs = [_from_bytes(mems[d].data[recv0:ret0],
+                                (R, eps, C, D)).copy()
+                    for d in range(R)]
+            toks = np.concatenate([
+                b[:, :, :c_max].transpose(1, 0, 2, 3).reshape(
+                    eps, R * c_max, D) for b in bufs], axis=0)
+            outs = expert_fn(toks)
+            assert outs.shape == (E, R * c_max, D), outs.shape
+            for d in range(R):  # write outputs back over the receive buckets
+                o = outs[d * eps:(d + 1) * eps].reshape(eps, R, c_max, D)
+                bufs[d][:, :, :c_max] = o.transpose(1, 0, 2, 3)
+                mems[d].data[recv0:ret0] = _to_bytes(bufs[d])
 
-        # ------------------------- combine (write back) ------------------
-        inv = {}
-        for r in range(R):
-            for t in range(Tl):
-                for k in range(K):
-                    inv[(r, int(top_idx[r, t, k]), int(slot_of[r, t, k]))] = (t, k)
-        for dst in range(R):
-            for src in range(R):
-                for el in range(self.eps):
-                    e = dst * self.eps + el
-                    c = counts.get((src, e), 0)
-                    if not c:
-                        continue
-                    base = recv0 + ((src * self.eps + el) * C) * tb
-                    mems[dst].data[base:base + c * tb] = _to_bytes(outs[(src, e)])
-                    for slot in range(c):
-                        t, k = inv[(src, e, slot)]
-                        ch = (t + k) % self.n_channels
-                        push(dst, ch, TransferCmd(
-                            op=Op.WRITE, dst_rank=src, channel=ch,
-                            src_off=base + slot * tb,
-                            dst_off=ret0 + (t * K + k) * tb,
-                            length=tb, value=0))
+        # -------------------- combine (write back) ------------------------
+        self._push_grouped(cs.combines, cs.combine_pusher, cs.combine_channel)
         self._pump(proxies)
 
-        # ------------------------- weighted reduce at source -------------
+        # -------------------- weighted reduce at source -------------------
         out = np.zeros((R, Tl, D), np.float64)
         for r in range(R):
-            ret = _from_bytes(mems[r].data[ret0:ret0 + Tl * K * tb], (Tl, K, D))
+            ret = _from_bytes(mems[r].data[ret0:ret0 + Tl * K * tb],
+                              (Tl, K, D))
             out[r] = np.einsum("tkd,tk->td", ret.astype(np.float64),
-                               top_w[r].astype(np.float64))
+                               np.where(wp.valid[r], top_w[r], 0.0)
+                               .astype(np.float64))
         return out.astype(np.float32)
+
+    # -------------------------------------------------- bulk push helpers --
+    def _push_grouped(self, words: np.ndarray, pusher: np.ndarray,
+                      channel: np.ndarray):
+        """Route a packed (N, 4) command stream to its per-rank proxies,
+        batched per (rank, channel) with original relative order preserved
+        inside each channel (the only order the protocol relies on)."""
+        pusher = np.asarray(pusher).reshape(-1)
+        channel = np.asarray(channel).reshape(-1)
+        for r in np.unique(pusher):
+            in_r = pusher == r
+            w_r, ch_r = words[in_r], channel[in_r]
+            for c in np.unique(ch_r):
+                self._push_words(int(r), int(c), w_r[ch_r == c])
+
+    def _push_words(self, r: int, ch: int, words: np.ndarray):
+        proxies = self.proxies
+        if self.use_threads:
+            # worker threads drain concurrently; block on ring space
+            # (the paper's kMaxInflight sender pacing, §3.1)
+            if not proxies[r]._threads:
+                proxies[r].start()
+            proxies[r].push_batch(ch, words, block=True)
+            return
+        done = 0
+        while done < len(words):
+            done += proxies[r].push_batch(ch, words[done:], block=False)
+            if done < len(words):
+                # back-pressure: relieve the full ring inline
+                proxies[r].drain_inline()
 
     def _pump(self, proxies):
         if self.use_threads:
-            import time
             for p in proxies:
                 if not p._threads:
                     p.start()

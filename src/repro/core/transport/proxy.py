@@ -65,6 +65,18 @@ class Proxy:
         c = self.channels[ch % len(self.channels)]
         return c.push(cmd) if block else c.try_push(cmd)
 
+    def push_batch(self, ch: int, words: np.ndarray,
+                   block: bool = True) -> int:
+        """Bulk push of packed (N, 4) uint32 descriptors onto one channel.
+
+        block=True waits for ring space (worker threads must be draining);
+        block=False pushes what fits and returns the count — the caller
+        relieves back-pressure (e.g. via :meth:`drain_inline`) and retries
+        with the remainder.
+        """
+        c = self.channels[ch % len(self.channels)]
+        return c.push_batch(words) if block else c.try_push_batch(words)
+
     # ------------------------------------------------------- CPU threads --
     def start(self):
         for t in range(self.n_threads):

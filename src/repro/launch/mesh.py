@@ -9,7 +9,8 @@ domain).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import AxisType  # jax version shims (make_mesh/AxisType)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

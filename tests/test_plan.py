@@ -1,0 +1,85 @@
+"""Dispatch-plan layer tests: the numpy and jnp dialects must produce
+bit-identical plans (they back different transport backends), and the plan
+primitives must satisfy their slot/count/dedup invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import plan as planlib
+
+
+def _random_table(seed, t=48, k=3, e=8, pad_frac=0.2):
+    rng = np.random.default_rng(seed)
+    ti = rng.integers(0, e, size=(t, k)).astype(np.int32)
+    ti[rng.random((t, k)) < pad_frac] = -1          # padded choices
+    return ti
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_rank_in_group_np_jnp_identical(seed):
+    ti = _random_table(seed).reshape(-1)
+    valid = ti >= 0
+    r_np = planlib.rank_in_group(ti, 8, valid)
+    r_jnp = planlib.rank_in_group(jnp.asarray(ti), 8, jnp.asarray(valid))
+    np.testing.assert_array_equal(r_np[valid], np.asarray(r_jnp)[valid])
+
+
+def test_rank_in_group_is_arrival_order():
+    gid = np.array([2, 0, 2, 2, 0, 1], np.int32)
+    valid = np.array([1, 1, 1, 0, 1, 1], bool)
+    rank = planlib.rank_in_group(gid, 3, valid)
+    # group 2 sees rows 0, 2 (row 3 invalid); group 0 sees rows 1, 4
+    assert rank[0] == 0 and rank[2] == 1
+    assert rank[1] == 0 and rank[4] == 1 and rank[5] == 0
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_make_plan_np_jnp_identical(seed):
+    ti = _random_table(seed)
+    cap = 6
+    p_np = planlib.make_plan(ti, 8, cap)
+    p_j = planlib.make_plan(jnp.asarray(ti), 8, cap)
+    np.testing.assert_array_equal(p_np.counts, np.asarray(p_j.counts))
+    np.testing.assert_array_equal(p_np.keep, np.asarray(p_j.keep))
+    v = p_np.valid
+    np.testing.assert_array_equal(p_np.rank[v], np.asarray(p_j.rank)[v])
+    assert int(p_np.n_dropped) == int(p_j.n_dropped)
+    # invariants: counts match valid mask; kept ranks are < capacity
+    assert p_np.counts.sum() == v.sum()
+    assert (p_np.rank[p_np.keep] < cap).all()
+
+
+def test_make_world_plan_matches_per_rank_plans():
+    rng = np.random.default_rng(7)
+    R, T, K, E, cap = 3, 16, 2, 8, 5
+    ti = rng.integers(0, E, size=(R, T, K)).astype(np.int32)
+    wp = planlib.make_world_plan(ti, E, cap)
+    for r in range(R):
+        pr = planlib.make_plan(ti[r], E, cap)
+        np.testing.assert_array_equal(wp.rank[r], pr.rank)
+        np.testing.assert_array_equal(wp.counts[r], pr.counts)
+        np.testing.assert_array_equal(wp.keep[r], pr.keep)
+
+
+@pytest.mark.parametrize("seed", [0, 5])
+def test_dedup_entry_table_np_jnp_identical(seed):
+    t, k, g = 24, 4, 4
+    rng = np.random.default_rng(seed)
+    grp = rng.integers(0, g, size=(t, k)).astype(np.int32)
+    valid = rng.random((t, k)) < 0.8
+    grp = np.where(valid, grp, -1)
+    cap = 10
+    f_np, ev_np, rk_np, kp_np, dr_np = planlib.dedup_entry_table(
+        grp, valid, g, cap)
+    f_j, ev_j, rk_j, kp_j, dr_j = planlib.dedup_entry_table(
+        jnp.asarray(grp), jnp.asarray(valid), g, cap)
+    np.testing.assert_array_equal(f_np, np.asarray(f_j))
+    np.testing.assert_array_equal(ev_np, np.asarray(ev_j))
+    np.testing.assert_array_equal(kp_np, np.asarray(kp_j))
+    np.testing.assert_array_equal(rk_np[ev_np], np.asarray(rk_j)[ev_np])
+    assert int(dr_np) == int(dr_j)
+    # dedup semantics: exactly one 'first' per (token, group) pair present
+    for t_i in range(t):
+        groups = grp[t_i][valid[t_i]]
+        firsts = grp[t_i][f_np[t_i]]
+        assert sorted(set(groups.tolist())) == sorted(firsts.tolist())
