@@ -60,11 +60,12 @@ def gen_seed(top_idx: np.ndarray, capacity: int, n_channels: int = 8):
             if not c:
                 continue
             dst, el = e // eps, e % eps
+            # fence descriptor: src_off carries the full 32-bit write count
+            # (the seed's 6-bit truncation is fixed; see ISSUE 2)
             out.append(TransferCmd(
                 op=Op.ATOMIC, dst_rank=dst, channel=e % n_channels,
-                src_off=0, dst_off=r * eps + el, length=0,
-                value=(el & 0x3F) | (min(c, 63) << 6),
-                flags=FLAG_FENCE).pack())
+                src_off=c, dst_off=r * eps + el, length=0,
+                value=el, flags=FLAG_FENCE).pack())
     return np.stack(out)
 
 

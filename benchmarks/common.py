@@ -15,6 +15,23 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
+def make_ep_problem(seed: int, R: int, E: int, K: int, D: int, F: int,
+                    Tl: int, scale: float = 0.1):
+    """Seeded random EP problem (tokens, routing, expert weights) shared by
+    the transport benchmarks: x (R, Tl, D); ti/tw (R, Tl, K); w* (E, ., .)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((R, Tl, D)).astype(np.float32)
+    ti = rng.integers(0, E, size=(R, Tl, K)).astype(np.int32)
+    tw = rng.random((R, Tl, K)).astype(np.float32)
+    tw /= tw.sum(-1, keepdims=True)
+    wg = (rng.standard_normal((E, D, F)) * scale).astype(np.float32)
+    wu = (rng.standard_normal((E, D, F)) * scale).astype(np.float32)
+    wd = (rng.standard_normal((E, F, D)) * scale).astype(np.float32)
+    return x, ti, tw, wg, wu, wd
+
+
 def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     """Median wall-time per call in microseconds (fn must block)."""
     for _ in range(warmup):

@@ -33,6 +33,25 @@ def model_latency_us(n_tokens, mode, *, k=6, n_ranks=8, tok_bytes=7168,
     return lat + bytes_total / (bw * n_ranks) + 0.02 * n_msgs / n_ranks
 
 
+def measured_substrate_us(n_tokens: int, protocol: str) -> float:
+    """Measured (not modeled) completion time on the event-clock substrate:
+    the LL one-shot protocol vs the HT chunked/dedup'd protocol, same
+    routing table (the 'HT column' companion to the analytic rows)."""
+    from benchmarks.common import make_ep_problem
+    from repro.core.transport import EPWorld, NetConfig
+
+    R, E, K, D, F = 4, 8, 4, 32, 32
+    Tl = n_tokens // R
+    x, ti, tw, wg, wu, wd = make_ep_problem(0, R, E, K, D, F, Tl)
+    w = EPWorld(n_ranks=R, n_experts=E, top_k=K, d=D, f=F, capacity=Tl * K,
+                net_cfg=NetConfig(mode="srd", seed=0))
+    if protocol == "ht":
+        w.run_ht(x, ti, tw, wg, wu, wd, n_chunks=max(1, min(4, Tl)))
+    else:
+        w.run(x, ti, tw, wg, wu, wd)
+    return w.net.clock_us
+
+
 def main():
     for n in (128, 512, 2048, 8192, 32768):
         t_tok = model_latency_us(n, "token")
@@ -40,6 +59,13 @@ def main():
         emit(f"fig04_token_vs_bulk/token_level/tokens={n}", t_tok,
              f"speedup_vs_bulk={t_bulk / t_tok:.2f}x")
         emit(f"fig04_token_vs_bulk/bulk/tokens={n}", t_bulk, "")
+    for n in (256, 1024):
+        t_ll = measured_substrate_us(n, "ll")
+        t_ht = measured_substrate_us(n, "ht")
+        emit(f"fig04_token_vs_bulk/substrate_ll/tokens={n}", t_ll,
+             "event-clock us")
+        emit(f"fig04_token_vs_bulk/substrate_ht/tokens={n}", t_ht,
+             f"event-clock us;vs_ll={t_ll / t_ht:.2f}x")
 
 
 if __name__ == "__main__":

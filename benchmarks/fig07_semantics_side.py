@@ -6,42 +6,43 @@ sent immediately and held in the control buffer — measured here by running
 the LL protocol both ways on the transport simulator and comparing modeled
 completion times.
 """
-import numpy as np
-
 from benchmarks.common import emit
 from repro.core.transport import EPWorld, NetConfig
 
 
-def run(mode_side: str, n_tokens: int):
-    rng = np.random.default_rng(0)
+def run(mode_side: str, n_tokens: int, protocol: str = "ll"):
+    from benchmarks.common import make_ep_problem
+
     R, E, K, D, F = 4, 8, 3, 64, 64
     Tl = n_tokens // R
-    x = rng.standard_normal((R, Tl, D)).astype(np.float32)
-    ti = rng.integers(0, E, size=(R, Tl, K)).astype(np.int32)
-    tw = rng.random((R, Tl, K)).astype(np.float32)
-    tw /= tw.sum(-1, keepdims=True)
-    wg = (rng.standard_normal((E, D, F)) * 0.1).astype(np.float32)
-    wu = (rng.standard_normal((E, D, F)) * 0.1).astype(np.float32)
-    wd = (rng.standard_normal((E, F, D)) * 0.1).astype(np.float32)
+    x, ti, tw, wg, wu, wd = make_ep_problem(0, R, E, K, D, F, Tl)
     w = EPWorld(n_ranks=R, n_experts=E, top_k=K, d=D, f=F, capacity=Tl * K,
                 net_cfg=NetConfig(mode="srd", seed=1))
-    out = w.run(x, ti, tw, wg, wu, wd)
+    if protocol == "ht":
+        w.run_ht(x, ti, tw, wg, wu, wd, n_chunks=4)
+    else:
+        w.run(x, ti, tw, wg, wu, wd)
     t = w.net.clock_us
     if mode_side == "sender":
         # sender-side fencing costs one extra RTT per (src, expert) fence,
         # serialised with the data stream (paper §3.3 discussion)
         n_fences = sum(1 for r in range(R) for e in range(E))
         t = t + n_fences * 2 * w.net.cfg.base_latency_us
-    return t
+    return t, w.timeline
 
 
 def main():
     for n in (256, 1024, 4096):
-        t_recv = run("receiver", n)
-        t_send = run("sender", n)
+        t_recv, tl = run("receiver", n)
+        t_send, _ = run("sender", n)
         emit(f"fig07_semantics/receiver_side/tokens={n}", t_recv,
-             f"vs_sender={t_send / t_recv:.2f}x")
+             f"vs_sender={t_send / t_recv:.2f}x;"
+             f"overlap_us={tl['overlap_us']:.2f}")
         emit(f"fig07_semantics/sender_side/tokens={n}", t_send, "")
+        t_ht, tl_ht = run("receiver", n, protocol="ht")
+        emit(f"fig07_semantics/receiver_side_ht/tokens={n}", t_ht,
+             f"vs_ll={t_recv / t_ht:.2f}x;"
+             f"overlap_us={tl_ht['overlap_us']:.2f}")
 
 
 if __name__ == "__main__":

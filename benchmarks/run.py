@@ -1,10 +1,14 @@
 """Benchmark harness (assignment deliverable d): one entry per paper figure.
-Prints ``name,us_per_call,derived`` CSV.  Host-only benchmarks run in-process
+Prints ``name,us_per_call,derived`` CSV and writes the same results as
+machine-readable JSON (``BENCH_results.json`` by default) so the perf
+trajectory is trackable across PRs.  Host-only benchmarks run in-process
 (1 device); device benchmarks run in subprocesses with 8 fake CPU devices.
 
-  PYTHONPATH=src python -m benchmarks.run [--only figXX]
+  PYTHONPATH=src python -m benchmarks.run [--only figXX] [--json PATH]
 """
 import argparse
+import json
+import math
 import sys
 
 from benchmarks.common import run_subprocess_bench
@@ -23,19 +27,59 @@ DEVICE_BENCHES = [
 ]
 
 
+def parse_csv_lines(text: str) -> dict:
+    """``name,us_per_call,derived`` lines -> {name: {us_per_call, derived}}.
+    Lines that don't parse (subprocess noise, headers) are skipped."""
+    out = {}
+    for line in text.splitlines():
+        parts = line.strip().split(",", 2)
+        if len(parts) < 2 or parts[0] in ("", "name"):
+            continue
+        try:
+            us = float(parts[1])
+        except ValueError:
+            continue
+        out[parts[0]] = {"us_per_call": us,
+                         "derived": parts[2] if len(parts) > 2 else ""}
+    return out
+
+
+def validate_results(results: dict) -> None:
+    """Schema check used by the CI smoke step: at least one entry, every
+    entry keyed by a non-empty name with a finite, positive us_per_call."""
+    assert isinstance(results, dict) and results, "no benchmark results"
+    for name, entry in results.items():
+        assert isinstance(name, str) and name, name
+        assert isinstance(entry, dict), (name, entry)
+        us = entry.get("us_per_call")
+        assert isinstance(us, (int, float)) and math.isfinite(us) and us > 0, \
+            (name, us)
+        assert isinstance(entry.get("derived", ""), str), (name, entry)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default="BENCH_results.json",
+                    help="write results as JSON here ('' disables)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
+    results: dict = {}
     for mod in HOST_BENCHES + DEVICE_BENCHES:
         if args.only and args.only not in mod:
             continue
         # every bench runs in a subprocess so the parent never initialises
         # jax with the wrong device count
         n_dev = 8 if mod in DEVICE_BENCHES else 1
-        sys.stdout.write(run_subprocess_bench(mod, n_devices=n_dev))
+        out = run_subprocess_bench(mod, n_devices=n_dev)
+        sys.stdout.write(out)
         sys.stdout.flush()
+        results.update(parse_csv_lines(out))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"# wrote {len(results)} results to {args.json}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

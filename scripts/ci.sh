@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
-# CI entrypoint: install dev deps (best-effort in hermetic envs) and run the
-# tier-1 suite exactly as ROADMAP.md specifies.
+# CI entrypoint: install dev deps (best-effort in hermetic envs), run the
+# tier-1 suite exactly as ROADMAP.md specifies, then a benchmark smoke step
+# (fig15 + JSON schema validation) so benchmark bit-rot fails fast.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -11,3 +12,17 @@ python -m pip install -e '.[dev]' 2>/dev/null \
     || echo "ci.sh: pip install skipped (offline env); running with baked-in deps"
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+# Benchmark smoke: one host benchmark end-to-end, plus the machine-readable
+# results file the perf trajectory is tracked with across PRs.
+BENCH_JSON="$(mktemp -t bench_smoke.XXXXXX.json)"
+trap 'rm -f "$BENCH_JSON"' EXIT
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --only fig15 --json "$BENCH_JSON" > /dev/null
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} BENCH_JSON="$BENCH_JSON" python - <<'EOF'
+import json, os
+from benchmarks.run import validate_results
+results = json.load(open(os.environ["BENCH_JSON"]))
+validate_results(results)
+print(f"ci.sh: benchmark smoke OK ({len(results)} results)")
+EOF

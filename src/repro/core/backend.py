@@ -130,7 +130,16 @@ class SimulatedRDMABackend:
         world = EPWorld(n_ranks=R, n_experts=spec.n_experts, top_k=K, d=D,
                         capacity=Tl * K, net_cfg=self.net_cfg,
                         n_channels=self.n_channels)
-        out = world.run(x.reshape(R, Tl, D), top_idx.reshape(R, Tl, K),
-                        top_w.reshape(R, Tl, K), expert_fn=global_expert_fn)
+        xs = x.reshape(R, Tl, D)
+        tis = top_idx.reshape(R, Tl, K)
+        tws = top_w.reshape(R, Tl, K)
+        if spec.mode == "ht":
+            # HT: chunked dedup'd dispatch + hierarchical reduce, executed
+            # literally on the substrate; capacity Tl per (src, dst) bucket
+            # is lossless (a token crosses each rank boundary at most once)
+            out = world.run_ht(xs, tis, tws, expert_fn=global_expert_fn,
+                               n_chunks=spec.chunks, capacity=Tl)
+        else:
+            out = world.run(xs, tis, tws, expert_fn=global_expert_fn)
         self.last_world = world
         return DispatchResult(out.reshape(T, D), {"dropped": np.float32(0.0)})

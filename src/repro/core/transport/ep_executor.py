@@ -1,20 +1,35 @@
 """End-to-end EP dispatch/combine over the transport substrate.
 
-Executes the paper's LL protocol literally: per-token RDMA writes tagged with
-immediate data, one completion-fence atomic per (source, expert), expert FFN
-at the destination, per-token combine writes back, weighted reduce at the
-source — all over the unordered (SRD) or ordered (RC) network model, through
-128-bit FIFO channels and CPU proxies.
+Executes the paper's protocols literally over the event-driven network model
+(DESIGN.md §10), through 128-bit FIFO channels and CPU proxies:
+
+- **LL** (:meth:`EPWorld.run`): per-token RDMA writes tagged with immediate
+  data, one completion-fence atomic per (source, expert), expert FFN at the
+  destination, per-token combine writes back, weighted reduce at the source.
+  The run is a *pipelined state machine*: when a (src, expert) fence applies
+  at the receiver, the proxy fires a readiness event, and — once every
+  source's fence for an expert has landed — that expert's FFN launches and
+  its combine writes enter the network while other experts' dispatch writes
+  are still in flight (the paper's proxy/compute overlap).
+
+- **HT** (:meth:`EPWorld.run_ht`): chunked dispatch with per-(token, group)
+  deduplication and hierarchical reduce.  A token crosses to each
+  destination *rank* once per round, its expert list and combine weights
+  riding as payload metadata; chunk boundaries are SEQ_ATOMIC markers that
+  apply only when the chunk's writes have all applied (per-channel sequence
+  order), so each (src, chunk) bucket's partial FFN launches as soon as its
+  marker lands.  Exactly one partially reduced vector returns per
+  (token, destination rank) — group reduce at the receiver, global reduce at
+  the source.
 
 Routing decisions (slot assignment, per-(src, expert) counts, capacity
-masks) come from the shared plan layer (:mod:`repro.core.plan`) — the same
-plans the jax-collectives path consumes — and are turned into *batched*
-TransferCmd streams: packed ``(N, 4)`` uint32 arrays pushed through the
-``Proxy.push_batch`` bulk FIFO path.  No per-command Python objects on the
-hot path (DESIGN.md §8).
+masks, dedup tables) come from the shared plan layer (:mod:`repro.core.plan`)
+— the same plans the jax-collectives path consumes — and are turned into
+*batched* TransferCmd streams: packed ``(N, 4)`` uint32 arrays pushed through
+the ``Proxy.push_batch`` bulk FIFO path (DESIGN.md §8).
 
 Tests prove protocol correctness (result == dense oracle under any delivery
-order); benchmarks reuse it for paper Figs. 7/15/17.
+order); benchmarks reuse it for paper Figs. 4/7/15/17.
 """
 from __future__ import annotations
 
@@ -27,17 +42,20 @@ import numpy as np
 from repro.core import plan as planlib
 from repro.core.transport.fifo import FLAG_FENCE, Op, pack_cmds
 from repro.core.transport.proxy import Proxy, SymmetricMemory
+from repro.core.transport.semantics import IMM_VAL_MAX, UNFENCED_SLOT
 from repro.core.transport.simulator import Network, NetConfig
 
 F32 = np.dtype(np.float32)
 
 
 class CommandStreams(NamedTuple):
-    """Batched TransferCmd streams for one EP round, plus routing metadata.
+    """Batched TransferCmd streams for one LL EP round, plus routing metadata.
 
     Each stream is a packed (N, 4) uint32 descriptor array (invalid routing
     entries already dropped) with parallel per-row ``*_pusher`` (the rank
-    whose proxy issues the command) and ``*_channel`` arrays."""
+    whose proxy issues the command) and ``*_channel`` arrays.
+    ``entry_expert`` is the global expert id per kept entry — the bucket key
+    the pipelined executor uses to launch per-expert combine streams."""
 
     plan: planlib.WorldPlan
     writes: np.ndarray          # dispatch data writes
@@ -49,6 +67,7 @@ class CommandStreams(NamedTuple):
     combines: np.ndarray        # combine writes back to the source
     combine_pusher: np.ndarray
     combine_channel: np.ndarray
+    entry_expert: np.ndarray    # global expert id per kept entry
 
 
 def build_command_streams(top_idx: np.ndarray, n_experts: int, eps: int,
@@ -60,6 +79,11 @@ def build_command_streams(top_idx: np.ndarray, n_experts: int, eps: int,
     The single source of truth for how plans become TransferCmd streams —
     ``EPWorld.run`` executes exactly these; ``benchmarks/bench_plan.py``
     times this function against the seed's Python loops.
+
+    Fence commands carry their full required write count in the 32-bit
+    ``src_off`` operand field (the immediate codec packs 21 bits), so
+    buckets larger than 63 tokens fence correctly — the seed truncated the
+    count to 6 bits.
     """
     ti = np.ascontiguousarray(top_idx, np.int64)
     R, Tl, K = ti.shape
@@ -83,15 +107,19 @@ def build_command_streams(top_idx: np.ndarray, n_experts: int, eps: int,
 
     writes = pack_cmds(int(Op.WRITE), dst, ch, src_off, recv_off, tb,
                        el)[valid]
+    # combine writes use the reserved unfenced slot: they share the source's
+    # per-peer ControlBuffer with that peer's own dispatch writes, and must
+    # never count toward a dispatch fence guard (the pipelined executor has
+    # combines in flight while other buckets' dispatches still are)
     combines = pack_cmds(int(Op.WRITE), src_rank, ch, recv_off, ret_off, tb,
-                         0)[valid]
+                         UNFENCED_SLOT)[valid]
     ch_flat = ch.reshape(-1)[valid]
 
     r_f, e_f = np.nonzero(wp.counts > 0)
     el_f = e_f % eps
-    fence_val = (el_f & 0x3F) | (np.minimum(wp.counts[r_f, e_f], 63) << 6)
-    fences = pack_cmds(int(Op.ATOMIC), e_f // eps, e_f % n_channels, 0,
-                       r_f * eps + el_f, 0, fence_val, FLAG_FENCE)
+    fences = pack_cmds(int(Op.ATOMIC), e_f // eps, e_f % n_channels,
+                       wp.counts[r_f, e_f], r_f * eps + el_f, 0, el_f,
+                       FLAG_FENCE)
 
     return CommandStreams(
         plan=wp,
@@ -99,7 +127,8 @@ def build_command_streams(top_idx: np.ndarray, n_experts: int, eps: int,
         write_channel=ch_flat,
         fences=fences, fence_pusher=r_f, fence_channel=e_f % n_channels,
         combines=combines, combine_pusher=dst.reshape(-1)[valid],
-        combine_channel=ch_flat)
+        combine_channel=ch_flat,
+        entry_expert=ti.reshape(-1)[valid])
 
 
 def np_swiglu(x: np.ndarray, wg, wu, wd) -> np.ndarray:
@@ -141,41 +170,92 @@ class EPWorld:
     def __post_init__(self):
         assert self.n_experts % self.n_ranks == 0
         self.eps = self.n_experts // self.n_ranks
+        # 6-bit slot field, minus the reserved unfenced (combine) slot
+        assert self.eps < UNFENCED_SLOT + 1, \
+            "imm codec carries 6-bit expert slots (63 usable)"
         self.tok_bytes = self.d * 4
-        self.net = Network(self.net_cfg, self.n_ranks)
+        self.net = Network(self.net_cfg, self.n_ranks,
+                           threadsafe=self.use_threads)
         self.proxies: list[Proxy] = []
         self.mems: list[SymmetricMemory] = []
+        self._dirty = False
+        self.timeline: dict = {}
 
+    # ------------------------------------------------------------ setup ----
+    def _make_world(self, total_bytes: int, n_counters: int):
+        R = self.n_ranks
+        mems = [SymmetricMemory.create(total_bytes, n_counters=n_counters)
+                for _ in range(R)]
+        proxies = [Proxy(r, self.net, mems[r], n_threads=self.n_threads,
+                         n_channels=self.n_channels)
+                   for r in range(R)]
+        self.proxies, self.mems = proxies, mems
+        return mems, proxies
+
+    def _reset_timeline(self):
+        self.timeline = {"compute_start_us": [], "first_compute_us": None,
+                         "last_dispatch_write_us": 0.0,
+                         "last_delivery_us": 0.0, "overlap_us": 0.0}
+
+    def _note_compute(self, key):
+        t = self.net.clock_us
+        tl = self.timeline
+        tl["compute_start_us"].append((key, t))
+        if tl["first_compute_us"] is None:
+            tl["first_compute_us"] = t
+
+    def _watch_dispatch(self, lo: int, hi: int):
+        """Record, on the event clock, when each dispatch write (a payload
+        write into the receive region [lo, hi)) is delivered — the overlap
+        metric compares the last of these against the first compute."""
+        def hook(msg):
+            if msg.kind == "write" and lo <= msg.dst_off < hi:
+                tl = self.timeline
+                tl["last_dispatch_write_us"] = max(
+                    tl["last_dispatch_write_us"], msg.deliver_t)
+        self.net.on_deliver_hook = hook
+
+    def _finish_timeline(self):
+        tl = self.timeline
+        tl["last_delivery_us"] = self.net.clock_us
+        if tl["first_compute_us"] is not None:
+            tl["overlap_us"] = (tl["last_dispatch_write_us"]
+                                - tl["first_compute_us"])
+        self.net.on_deliver_hook = None
+
+    # ===================================================== LL protocol =====
     def run(self, x: np.ndarray, top_idx: np.ndarray, top_w: np.ndarray,
             wg: Optional[np.ndarray] = None, wu: Optional[np.ndarray] = None,
             wd: Optional[np.ndarray] = None, *,
             expert_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None,
-            ) -> np.ndarray:
+            overlap: Optional[bool] = None) -> np.ndarray:
         """x: (R, Tl, D); top_idx/top_w: (R, Tl, K); w*: (E, D, F)/(E, F, D).
 
         Expert compute is either the built-in grouped SwiGLU over
         ``wg/wu/wd`` or a caller-supplied ``expert_fn`` with the standard
         backend contract: ``(n_experts, N, D) -> (n_experts, N, D)``, row
         block e holding the tokens received by (global) expert e.
+
+        ``overlap`` selects the compute launch policy: True launches each
+        expert's FFN the moment its readiness event fires (per-expert
+        compute, weighted per-expert weight slices), False waits for all
+        fences and issues one grouped call.  Default: True when per-expert
+        weights are given, False for a generic grouped ``expert_fn`` (whose
+        contract prices a full-width call per bucket).
         """
         R, Tl, D = x.shape
         K, C = self.top_k, self.capacity
         E, eps, tb = self.n_experts, self.eps, self.tok_bytes
         nc = self.n_channels
+        if overlap is None:
+            overlap = expert_fn is None
         if expert_fn is None:
             assert wg is not None and wu is not None and wd is not None
-            expert_fn = lambda toks: np_grouped_swiglu(toks, wg, wu, wd)  # noqa: E731
         send0 = 0
         recv0 = send0 + Tl * tb
         ret0 = recv0 + R * eps * C * tb
         total = ret0 + Tl * K * tb
-        mems = [SymmetricMemory.create(total, n_counters=R * eps + R)
-                for _ in range(R)]
-        proxies = [Proxy(r, self.net, mems[r], n_threads=self.n_threads,
-                         n_channels=nc,
-                         ordered_transport=(self.net_cfg.mode == "rc"))
-                   for r in range(R)]
-        self.proxies, self.mems = proxies, mems
+        mems, proxies = self._make_world(total, n_counters=R * eps)
         for r in range(R):
             mems[r].data[send0:send0 + Tl * tb] = _to_bytes(x[r])
 
@@ -187,35 +267,76 @@ class EPWorld:
         wp = cs.plan
         assert int(wp.counts.max()) <= C, "capacity overflow in setup"
 
+        self._reset_timeline()
+        self._watch_dispatch(recv0, ret0)
+
+        # ---- readiness state machine: expert e is ready once the fence of
+        # every contributing source has applied at its destination ----------
+        remaining = (np.asarray(wp.counts) > 0).sum(axis=0).astype(np.int64)
+        ready: list[int] = []
+
+        def fence_ready(dst, src, counter_idx, operand):
+            e = dst * eps + (counter_idx - src * eps)
+            remaining[e] -= 1
+            if remaining[e] == 0:
+                ready.append(e)
+        for d in range(R):
+            proxies[d].on_ready = \
+                lambda src, idx, v, d=d: fence_ready(d, src, idx, v)
+
+        # per-expert combine row index (stable bucketing of the flat stream)
+        order = np.argsort(cs.entry_expert, kind="stable")
+        starts = np.searchsorted(cs.entry_expert[order], np.arange(E + 1))
+
+        def single_expert(e, toks):
+            if expert_fn is None:
+                return np_swiglu(toks, wg[e], wu[e], wd[e])
+            buf = np.zeros((E, len(toks), D), np.float32)
+            buf[e] = toks
+            return np.asarray(expert_fn(buf))[e]
+
+        def launch(e):
+            d, el = divmod(e, eps)
+            cnts = np.asarray(wp.counts)[:, e]
+            srcs = np.flatnonzero(cnts)
+            self._note_compute(("ll", e))
+            bases = [recv0 + (int(r) * eps + el) * C * tb for r in srcs]
+            toks = np.concatenate(
+                [mems[d].data[b:b + int(cnts[r]) * tb]
+                 for b, r in zip(bases, srcs)]).view(np.float32).reshape(-1, D)
+            out = np.ascontiguousarray(single_expert(e, toks),
+                                       np.float32).view(np.uint8).reshape(-1)
+            # write outputs back over the receive bucket, then stream the
+            # combine writes for exactly this bucket
+            off = 0
+            for b, r in zip(bases, srcs):
+                nb = int(cnts[r]) * tb
+                mems[d].data[b:b + nb] = out[off:off + nb]
+                off += nb
+            rows = order[starts[e]:starts[e + 1]]
+            if len(rows):
+                self._push_grouped(cs.combines[rows],
+                                   cs.combine_pusher[rows],
+                                   cs.combine_channel[rows])
+
         self._push_grouped(cs.writes, cs.write_pusher, cs.write_channel)
         self._push_grouped(cs.fences, cs.fence_pusher, cs.fence_channel)
-        self._pump(proxies)
-        for r, e in zip(*(a.tolist() for a in np.nonzero(wp.counts > 0))):
-            assert mems[e // eps].counters[r * eps + e % eps] == 1, (r, e)
 
-        # -------------------- expert compute (one grouped call) -----------
-        # stack each destination's receive region into a global
-        # (E, R*c_max, D) buffer: expert e = dst*eps + el, row block per
-        # src.  Only the occupied slot prefix (c_max = fullest bucket) is
-        # computed — the rest of each capacity-C bucket is padding.
-        c_max = int(wp.counts.max())
-        if c_max:
-            bufs = [_from_bytes(mems[d].data[recv0:ret0],
-                                (R, eps, C, D)).copy()
-                    for d in range(R)]
-            toks = np.concatenate([
-                b[:, :, :c_max].transpose(1, 0, 2, 3).reshape(
-                    eps, R * c_max, D) for b in bufs], axis=0)
-            outs = expert_fn(toks)
-            assert outs.shape == (E, R * c_max, D), outs.shape
-            for d in range(R):  # write outputs back over the receive buckets
-                o = outs[d * eps:(d + 1) * eps].reshape(eps, R, c_max, D)
-                bufs[d][:, :, :c_max] = o.transpose(1, 0, 2, 3)
-                mems[d].data[recv0:ret0] = _to_bytes(bufs[d])
+        if overlap:
+            self._pump_events(proxies, ready, launch)
+            assert int(remaining[np.asarray(wp.counts).sum(0) > 0].sum()) == 0
+        else:
+            self._pump_events(proxies)
+            for r, e in zip(*(a.tolist()
+                              for a in np.nonzero(np.asarray(wp.counts) > 0))):
+                assert mems[e // eps].counters[r * eps + e % eps] == 1, (r, e)
+            self._grouped_compute(mems, wp, expert_fn, wg, wu, wd,
+                                  recv0, ret0)
+            self._push_grouped(cs.combines, cs.combine_pusher,
+                               cs.combine_channel)
+            self._pump_events(proxies)
 
-        # -------------------- combine (write back) ------------------------
-        self._push_grouped(cs.combines, cs.combine_pusher, cs.combine_channel)
-        self._pump(proxies)
+        self._finish_timeline()
 
         # -------------------- weighted reduce at source -------------------
         out = np.zeros((R, Tl, D), np.float64)
@@ -226,6 +347,207 @@ class EPWorld:
                                np.where(wp.valid[r], top_w[r], 0.0)
                                .astype(np.float64))
         return out.astype(np.float32)
+
+    def _grouped_compute(self, mems, wp, expert_fn, wg, wu, wd, recv0, ret0):
+        """Barrier-mode expert compute: one grouped call over every receive
+        bucket (the pre-pipelining behaviour; used for generic expert_fn)."""
+        R, E, eps, C, D = (self.n_ranks, self.n_experts, self.eps,
+                           self.capacity, self.d)
+        if expert_fn is None:
+            expert_fn = lambda toks: np_grouped_swiglu(toks, wg, wu, wd)  # noqa: E731
+        c_max = int(np.asarray(wp.counts).max())
+        if not c_max:
+            return
+        self._note_compute(("ll", "grouped"))
+        bufs = [_from_bytes(mems[d].data[recv0:ret0], (R, eps, C, D)).copy()
+                for d in range(R)]
+        toks = np.concatenate([
+            b[:, :, :c_max].transpose(1, 0, 2, 3).reshape(
+                eps, R * c_max, D) for b in bufs], axis=0)
+        outs = np.asarray(expert_fn(toks), np.float32)
+        assert outs.shape == (E, R * c_max, D), outs.shape
+        for d in range(R):      # write outputs back over the receive buckets
+            o = outs[d * eps:(d + 1) * eps].reshape(eps, R, c_max, D)
+            bufs[d][:, :, :c_max] = o.transpose(1, 0, 2, 3)
+            mems[d].data[recv0:ret0] = _to_bytes(bufs[d])
+
+    # ===================================================== HT protocol =====
+    def run_ht(self, x: np.ndarray, top_idx: np.ndarray, top_w: np.ndarray,
+               wg: Optional[np.ndarray] = None,
+               wu: Optional[np.ndarray] = None,
+               wd: Optional[np.ndarray] = None, *,
+               expert_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+               n_chunks: int = 1,
+               capacity: Optional[int] = None) -> np.ndarray:
+        """Chunked + dedup'd + hierarchical dispatch/combine (paper HT mode)
+        executed literally on the transport substrate.
+
+        Per source rank, the shared dedup table (plan.dedup_entry_table over
+        destination *ranks*) selects one entry per (token, destination); the
+        entry's payload is the token vector plus its expert-id/weight
+        metadata.  Dispatch is chunked: after each chunk's entry writes, a
+        SEQ_ATOMIC chunk marker per destination closes the chunk — it
+        applies only once the chunk's writes all applied (per-channel
+        sequence order), firing the readiness event that launches the
+        destination's partial FFN for that (src, chunk) bucket.  One
+        group-reduced vector per entry returns; the source sums per token.
+        """
+        R, Tl, D = x.shape
+        K = self.top_k
+        E, eps, tb = self.n_experts, self.eps, self.tok_bytes
+        nc = self.n_channels
+        C = capacity or Tl                    # entries per (src, dst) bucket
+        if n_chunks < 1 or Tl % n_chunks:
+            # mirror the jax HT path's fallback for non-dividing chunk
+            # counts; recorded in the timeline so the downgrade is visible
+            n_chunks = 1
+        # chunk ids ride the 10-bit SEQ_ATOMIC operand field
+        assert n_chunks <= IMM_VAL_MAX + 1, \
+            f"n_chunks {n_chunks} exceeds the {IMM_VAL_MAX + 1} chunk ids " \
+            "the immediate codec can carry"
+        chunk_len = Tl // n_chunks
+        ent_b = tb + K * 8                    # token + K ids + K weights
+        if expert_fn is None:
+            assert wg is not None and wu is not None and wd is not None
+
+        send0 = 0
+        recv0 = send0 + R * C * ent_b
+        comb0 = recv0 + R * C * ent_b
+        ret0 = comb0 + R * C * tb
+        total = ret0 + R * C * tb
+        mems, proxies = self._make_world(total, n_counters=R * n_chunks)
+
+        self._reset_timeline()
+        self.timeline["n_chunks"] = n_chunks
+        self._watch_dispatch(recv0, comb0)
+
+        # ---- per-source dedup plans + payload staging --------------------
+        valid = top_idx >= 0
+        g_of = np.where(valid, top_idx // eps, -1)           # (R, Tl, K)
+        el_of = np.where(valid, top_idx % eps, -1)
+        plans = []            # (ts, gs, slots, chunk_of) per source
+        dropped = 0
+        for r in range(R):
+            _, entry_valid, rank_tg, keep_tg, n_drop = \
+                planlib.dedup_entry_table(g_of[r], valid[r], R, C)
+            dropped += int(n_drop)
+            ts, gs = np.nonzero(keep_tg)
+            slots = rank_tg[ts, gs]
+            plans.append((ts, gs, slots, ts // chunk_len))
+            # entry metadata: choice k rides iff routed to this destination
+            m = g_of[r][ts] == gs[:, None]                    # (n, K)
+            eids = np.where(m, el_of[r][ts], -1).astype(np.int32)
+            ws = np.where(m, top_w[r][ts], 0.0).astype(np.float32)
+            payload = np.zeros((len(ts), ent_b), np.uint8)
+            payload[:, :tb] = np.ascontiguousarray(
+                x[r][ts], np.float32).view(np.uint8)
+            payload[:, tb:tb + K * 4] = np.ascontiguousarray(eids).view(
+                np.uint8)
+            payload[:, tb + K * 4:] = np.ascontiguousarray(ws).view(np.uint8)
+            stage = np.zeros((R * C, ent_b), np.uint8)
+            stage[gs * C + slots] = payload
+            mems[r].data[send0:recv0] = stage.reshape(-1)
+        self.ht_dropped = dropped
+
+        # ---- readiness state machine: (dst, src, chunk) buckets ----------
+        ready: list[tuple[int, int, int]] = []
+
+        def marker_ready(dst, src, counter_idx, chunk):
+            assert counter_idx == src * n_chunks + chunk
+            ready.append((dst, src, chunk))
+        for g in range(R):
+            proxies[g].on_ready = \
+                lambda src, idx, v, g=g: marker_ready(g, src, idx, v)
+
+        def launch(g, r, c):
+            ts, gs, slots, chunk_of = plans[r]
+            sel = (gs == g) & (chunk_of == c)
+            if not sel.any():
+                return
+            self._note_compute(("ht", g, r, c))
+            sl = slots[sel]
+            raw = mems[g].data[recv0:comb0].reshape(R * C, ent_b)
+            rows = raw[r * C + sl]
+            toks = rows[:, :tb].copy().view(np.float32).reshape(-1, D)
+            eids = rows[:, tb:tb + K * 4].copy().view(np.int32).reshape(-1, K)
+            ws = rows[:, tb + K * 4:].copy().view(np.float32).reshape(-1, K)
+            part = self._bucket_partials(g, toks, eids, ws, expert_fn,
+                                         wg, wu, wd)
+            comb = mems[g].data[comb0:ret0].reshape(R * C, tb)
+            comb[r * C + sl] = part.astype(np.float32).view(np.uint8)
+            writes = pack_cmds(int(Op.WRITE), r, r % nc,
+                               comb0 + (r * C + sl) * tb,
+                               ret0 + (g * C + sl) * tb, tb, UNFENCED_SLOT)
+            self._push_words(g, r % nc, writes)
+
+        # ---- chunked dispatch: writes, then the chunk's markers ----------
+        for r in range(R):
+            ts, gs, slots, chunk_of = plans[r]
+            for c in range(n_chunks):
+                sel = chunk_of == c
+                if sel.any():
+                    writes = pack_cmds(
+                        int(Op.WRITE), gs[sel], gs[sel] % nc,
+                        send0 + (gs[sel] * C + slots[sel]) * ent_b,
+                        recv0 + (r * C + slots[sel]) * ent_b, ent_b, 0)
+                    self._push_grouped(writes, np.full(int(sel.sum()), r),
+                                       gs[sel] % nc)
+                # chunk markers ride the same per-destination channel as the
+                # chunk's writes, so their sequence numbers order after them
+                markers = pack_cmds(int(Op.ATOMIC), np.arange(R),
+                                    np.arange(R) % nc, c,
+                                    r * n_chunks + c, 0, 0)
+                self._push_grouped(markers, np.full(R, r), np.arange(R) % nc)
+
+        self._pump_events(proxies, ready, lambda b: launch(*b))
+        for g in range(R):
+            for r in range(R):
+                for c in range(n_chunks):
+                    assert mems[g].counters[r * n_chunks + c] == 1, (g, r, c)
+        self._finish_timeline()
+
+        # ---- global reduce at the source: sum the per-destination partials
+        out = np.zeros((R, Tl, D), np.float64)
+        for r in range(R):
+            ts, gs, slots, _ = plans[r]
+            ret = _from_bytes(mems[r].data[ret0:total], (R * C, D))
+            np.add.at(out[r], ts, ret[gs * C + slots].astype(np.float64))
+        return out.astype(np.float32)
+
+    def _bucket_partials(self, g: int, toks, eids, ws, expert_fn,
+                         wg, wu, wd) -> np.ndarray:
+        """Group-level reduce for one (src, chunk) bucket at destination g:
+        weighted partial sum over the destination's local experts, one
+        vector per entry."""
+        n, D = toks.shape
+        eps, E = self.eps, self.n_experts
+        part = np.zeros((n, D), np.float64)
+        if expert_fn is None:
+            for el in range(eps):
+                i, k = np.nonzero(eids == el)
+                if not len(i):
+                    continue
+                y = np_swiglu(toks[i], wg[g * eps + el], wu[g * eps + el],
+                              wd[g * eps + el])
+                np.add.at(part, i, ws[i, k][:, None].astype(np.float64)
+                          * y.astype(np.float64))
+            return part.astype(np.float32)
+        # generic grouped contract: bucket the (entry, choice) pairs per
+        # local expert and make one full-width expert_fn call
+        i_all, k_all = np.nonzero(eids >= 0)
+        if not len(i_all):
+            return part.astype(np.float32)
+        e_glob = g * eps + eids[i_all, k_all]
+        pl = planlib.make_plan(e_glob.reshape(-1, 1), E, len(i_all))
+        Ce = int(np.asarray(pl.counts).max())
+        buf = np.zeros((E, Ce, D), np.float32)
+        rank = np.asarray(pl.rank).reshape(-1)
+        buf[e_glob, rank] = toks[i_all]
+        y = np.asarray(expert_fn(buf), np.float32)
+        np.add.at(part, i_all,
+                  ws[i_all, k_all][:, None].astype(np.float64)
+                  * y[e_glob, rank].astype(np.float64))
+        return part.astype(np.float32)
 
     # -------------------------------------------------- bulk push helpers --
     def _push_grouped(self, words: np.ndarray, pusher: np.ndarray,
@@ -243,6 +565,7 @@ class EPWorld:
 
     def _push_words(self, r: int, ch: int, words: np.ndarray):
         proxies = self.proxies
+        self._dirty = True
         if self.use_threads:
             # worker threads drain concurrently; block on ring space
             # (the paper's kMaxInflight sender pacing, §3.1)
@@ -257,22 +580,53 @@ class EPWorld:
                 # back-pressure: relieve the full ring inline
                 proxies[r].drain_inline()
 
-    def _pump(self, proxies):
+    # ------------------------------------------------- event-driven pump ---
+    def _pump_events(self, proxies, ready: Optional[list] = None,
+                     launch: Optional[Callable] = None):
+        """Drive command execution and network delivery until the world
+        quiesces: FIFO rings empty, no command mid-execution, no message in
+        flight — the event-clock condition that replaced the seed's fixed
+        500-iteration polling loop.  Deliveries append readiness events to
+        ``ready``; ``launch`` consumes them between deliveries, so compute
+        interleaves with in-flight traffic."""
+        step = self.net.step
         if self.use_threads:
             for p in proxies:
                 if not p._threads:
                     p.start()
-            for _ in range(500):
-                if all(c.inflight == 0 for p in proxies for c in p.channels):
-                    break
-                time.sleep(1e-3)
-                self.net.flush()
-            self.net.flush()
-        else:
-            for _ in range(4):
+            deadline = time.monotonic() + 120.0
+            calm = 0
+            while True:
+                stepped = step()
+                while ready:
+                    launch(ready.pop())
+                for p in proxies:  # surface worker failures immediately
+                    if p.error is not None:
+                        raise RuntimeError(
+                            f"proxy {p.rank} worker failed") from p.error
+                if stepped:
+                    calm = 0
+                    continue
+                if any(p.busy for p in proxies) or self.net.pending:
+                    calm = 0
+                    if time.monotonic() > deadline:
+                        raise TimeoutError("transport quiesce timed out")
+                    time.sleep(2e-5)
+                    continue
+                calm += 1          # confirm stability across two checks
+                if calm >= 2:
+                    return
+                time.sleep(2e-5)
+        while True:
+            if self._dirty:
+                self._dirty = False
                 for p in proxies:
                     p.drain_inline()
-                self.net.flush()
+            stepped = step()
+            while ready:
+                launch(ready.pop())
+            if not stepped and not self._dirty:
+                return
 
     @staticmethod
     def oracle(x, top_idx, top_w, wg, wu, wd) -> np.ndarray:

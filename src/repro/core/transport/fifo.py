@@ -24,9 +24,12 @@ import numpy as np
 
 class Op(IntEnum):
     WRITE = 1          # one-sided RDMA write
-    ATOMIC = 2         # standalone atomic (emulated via immediate data)
-    DRAIN = 3          # drain CQ up to idx
-    BARRIER = 4        # all-peer or same-rail barrier
+    ATOMIC = 2         # standalone atomic (emulated via immediate data);
+    #                    src_off carries the 32-bit operand (fence count /
+    #                    chunk id), value carries the guard slot
+    DRAIN = 3          # drain CQ up to idx (scheduling hint)
+    BARRIER = 4        # reserved opcode (no receiver-side state; the event
+    #                    clock quiesce replaced the barrier round-trip)
     WRITE_ATOMIC = 5   # write with piggybacked atomic (completion counter)
 
 
@@ -55,11 +58,16 @@ class TransferCmd:
 
     @staticmethod
     def unpack(words: np.ndarray) -> "TransferCmd":
-        w0, w1, w2, w3 = (int(x) for x in words)
-        return TransferCmd(op=Op(w0 & 0xF), dst_rank=(w0 >> 4) & 0xFFF,
+        w0, w1, w2, w3 = words.tolist()
+        return TransferCmd(op=_OP_TABLE[w0 & 0xF], dst_rank=(w0 >> 4) & 0xFFF,
                            channel=(w0 >> 16) & 0xFF, src_off=w1, dst_off=w2,
                            length=w3 & 0xFFFFF, value=(w3 >> 20) & 0xFFF,
                            flags=(w0 >> 24) & 0xFF)
+
+
+# tuple dispatch: Op.__call__ through EnumMeta is hot in the consumer loop
+_OP_TABLE = (None, Op.WRITE, Op.ATOMIC, Op.DRAIN, Op.BARRIER, Op.WRITE_ATOMIC,
+             None, None, None, None, None, None, None, None, None, None)
 
 
 def pack_cmds(op, dst_rank, channel, src_off, dst_off, length, value,
@@ -206,6 +214,19 @@ class FifoChannel:
             self._head = idx + 1
             self._not_full.notify()
         return idx, cmd
+
+    def pop_all(self) -> Optional[np.ndarray]:
+        """Bulk pop: consume every queued descriptor in one lock round trip
+        (the inline-drain fast path).  Returns a packed (N, 4) copy."""
+        with self._not_full:
+            n = self._tail - self._head
+            if n <= 0:
+                return None
+            # advanced indexing already materializes a fresh array
+            words = self.buf[(self._head + np.arange(n)) % self.capacity]
+            self._head += n
+            self._not_full.notify()
+        return words
 
     def wait_nonempty(self, timeout: float = 0.1) -> bool:
         with self._not_empty:

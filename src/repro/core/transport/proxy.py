@@ -9,19 +9,29 @@ the thread's QPs unless the command pins a channel (ordering domain).
 
 Atomics are emulated EFA-style (§4.1): a zero-byte write carrying the value
 in immediate data; the receiver proxy updates host-memory counters when the
-guard in the ControlBuffer passes.
+guard in the ControlBuffer passes.  For ``Op.ATOMIC`` commands the 32-bit
+``src_off`` descriptor field (unused by a zero-byte transfer) carries the
+atomic operand — fence write-counts and HT chunk ids — and ``value`` carries
+the guard slot, so counts are no longer squeezed into 6 bits.
+
+When a guarded atomic *applies* (its fence passes / its sequence prefix
+closes) the receiving proxy fires ``on_ready(src, counter_idx, operand)``:
+the readiness event the EP executor uses to launch expert compute for that
+bucket while other buckets' writes are still in flight (DESIGN.md §10).
 """
 from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core.transport.fifo import FifoChannel, Op, TransferCmd
-from repro.core.transport.semantics import (ControlBuffer, ImmKind, pack_imm,
+from repro.core.transport.fifo import FLAG_FENCE, FifoChannel, Op, TransferCmd
+from repro.core.transport.semantics import (FENCE_COUNT_MAX, IMM_VAL_MAX,
+                                            N_CHANNELS_MAX, SEQ_MOD,
+                                            ControlBuffer, ImmKind, pack_imm,
                                             unpack_imm)
 from repro.core.transport.simulator import Message, Network
 
@@ -43,21 +53,24 @@ class SymmetricMemory:
 class Proxy:
     def __init__(self, rank: int, net: Network, mem: SymmetricMemory,
                  n_threads: int = 4, n_channels: int = 8,
-                 k_max_inflight: int = 64, ordered_transport: bool = False):
+                 k_max_inflight: int = 64):
+        assert n_channels <= N_CHANNELS_MAX, \
+            f"imm codec carries {N_CHANNELS_MAX} channels max"
         self.rank = rank
         self.net = net
         self.mem = mem
         self.n_threads = n_threads
         self.channels = [FifoChannel(k_max_inflight) for _ in range(n_channels)]
         self.ctrl: dict[int, ControlBuffer] = {}       # per source rank
-        self.ordered = ordered_transport
+        self.error: Optional[BaseException] = None     # first worker failure
         self._threads: list[threading.Thread] = []
         self._stop = threading.Event()
         self._seq: dict[tuple[int, int], int] = {}     # (dst, channel) -> seq
         self._lock = threading.Lock()
+        self._executing = 0          # commands mid-execution (quiesce check)
         self.stats = {"cmds": 0, "writes": 0, "atomics": 0, "held_max": 0}
-        self._barrier_state: dict[int, set] = {}
-        self._drained = threading.Event()
+        # readiness hook: (src_rank, counter_idx, operand) per applied atomic
+        self.on_ready: Optional[Callable[[int, int, int], None]] = None
         net.register(rank, self._on_deliver)
 
     # --------------------------------------------------------- GPU side --
@@ -91,6 +104,12 @@ class Proxy:
         for th in self._threads:
             th.join(timeout=2.0)
 
+    @property
+    def busy(self) -> bool:
+        """True while any command is queued or mid-execution (used by the
+        event-clock quiesce condition in threaded mode)."""
+        return self._executing > 0 or any(c.inflight for c in self.channels)
+
     def _worker(self, tid: int):
         my = self.channels[tid::self.n_threads]
         while not self._stop.is_set():
@@ -100,33 +119,49 @@ class Proxy:
                 if got is None:
                     continue
                 idx, cmd = got
-                self._execute(cmd)
-                ch.pop()
+                with self._lock:
+                    self._executing += 1
+                try:
+                    self._execute(cmd)
+                except BaseException as e:     # surface instead of hanging:
+                    if self.error is None:     # the quiesce loop re-raises
+                        self.error = e
+                finally:
+                    ch.pop()
+                    with self._lock:
+                        self._executing -= 1
                 busy = True
             if not busy:
                 time.sleep(1e-5)
 
     def drain_inline(self):
         """Single-threaded execution of everything queued (deterministic
-        mode used by tests/benchmarks without starting worker threads)."""
+        mode used by tests/benchmarks without starting worker threads).
+        Bulk-pops each channel so the ring's locking is per batch, not per
+        command."""
+        unpack = TransferCmd.unpack
         progress = True
         while progress:
             progress = False
             for ch in self.channels:
-                while True:
-                    got = ch.pop()
-                    if got is None:
-                        break
-                    self._execute(got[1])
-                    progress = True
+                words = ch.pop_all()
+                if words is None:
+                    continue
+                for row in words:
+                    self._execute(unpack(row))
+                progress = True
 
     # ------------------------------------------------------ cmd execution --
     def _next_seq(self, dst: int, channel: int) -> int:
-        with self._lock:
-            k = (dst, channel)
-            s = self._seq.get(k, 0)
-            self._seq[k] = s + 1
-            return s % 4096
+        # only sequence-ordered kinds (writes, seq atomics) consume numbers;
+        # fences carry no sequence, so they never hole a channel's prefix.
+        # No lock: each (dst, channel) key has exactly one writer — worker
+        # threads own disjoint channel subsets, and inline drains are
+        # single-threaded.
+        k = (dst, channel)
+        s = self._seq.get(k, 0)
+        self._seq[k] = s + 1
+        return s % SEQ_MOD
 
     def _execute(self, cmd: TransferCmd):
         self.stats["cmds"] += 1
@@ -141,26 +176,25 @@ class Proxy:
             if cmd.op == Op.WRITE_ATOMIC:
                 self._send_atomic(cmd, fence=True)
         elif cmd.op == Op.ATOMIC:
-            from repro.core.transport.fifo import FLAG_FENCE
             self._send_atomic(cmd, fence=bool(cmd.flags & FLAG_FENCE))
         elif cmd.op == Op.DRAIN:
-            self.net.flush()
-        elif cmd.op == Op.BARRIER:
-            # same-rail barrier via immediate data (leader = rank 0)
-            seq = self._next_seq(cmd.dst_rank, cmd.channel)
-            imm = pack_imm(ImmKind.BARRIER, cmd.channel, seq, 0,
-                           cmd.value & 0x3F)
-            self.net.send(Message(self.rank, cmd.dst_rank, qp=cmd.channel,
-                                  kind="imm", dst_off=0, payload=None, imm=imm))
+            # delivery is driven by the event clock (Network.step); a DRAIN
+            # descriptor is a scheduling hint with nothing left to do here
+            pass
+        else:
+            raise ValueError(f"unhandled op {cmd.op!r}")
 
     def _send_atomic(self, cmd: TransferCmd, fence: bool):
         self.stats["atomics"] += 1
         slot = cmd.value & 0x3F
-        count = (cmd.value >> 6) & 0x3F
-        seq = self._next_seq(cmd.dst_rank, cmd.channel)
-        kind = ImmKind.FENCE_ATOMIC if fence else ImmKind.SEQ_ATOMIC
-        imm = pack_imm(kind, cmd.channel, seq, slot,
-                       count if fence else min(count, 63))
+        operand = cmd.src_off               # 32-bit atomic operand field
+        if fence:
+            assert operand <= FENCE_COUNT_MAX, operand
+            imm = pack_imm(ImmKind.FENCE_ATOMIC, cmd.channel, 0, slot, operand)
+        else:
+            assert operand <= IMM_VAL_MAX, operand
+            seq = self._next_seq(cmd.dst_rank, cmd.channel)
+            imm = pack_imm(ImmKind.SEQ_ATOMIC, cmd.channel, seq, slot, operand)
         self.net.send(Message(self.rank, cmd.dst_rank, qp=cmd.channel,
                               kind="imm", dst_off=cmd.dst_off, payload=None,
                               imm=imm))
@@ -174,23 +208,19 @@ class Proxy:
     def _on_deliver(self, msg: Message):
         cb = self._ctrl_for(msg.src)
         if msg.kind == "write":
+            # writes apply immediately under ordered AND unordered
+            # transports (one-sided placements at distinct offsets are
+            # order-independent); only atomics need receiver-side guards
             def apply(m=msg):
                 self.mem.data[m.dst_off:m.dst_off + m.payload.size] = m.payload
-            if self.ordered:
-                apply()     # RC transport: ordering already guaranteed
-                cb.applied_log.append(msg.imm)
-                kind, ch, seq, slot, _ = unpack_imm(msg.imm)
-                cb.writes_seen[slot] += 1
-                cb._bump_seq(ch, seq)
-                cb._drain(ch)
-            else:
-                cb.on_write(msg.imm, apply)
+            cb.on_write(msg.imm, apply)
         else:
             kind, ch, seq, slot, value = unpack_imm(msg.imm)
-            if kind == ImmKind.BARRIER:
-                self._barrier_state.setdefault(value, set()).add(msg.src)
-                return
-            def apply(m=msg, s=slot):
-                self.mem.counters[m.dst_off % len(self.mem.counters)] += 1
+
+            def apply(m=msg, v=value):
+                idx = m.dst_off % len(self.mem.counters)
+                self.mem.counters[idx] += 1
+                if self.on_ready is not None:
+                    self.on_ready(m.src, idx, v)
             cb.on_atomic(msg.imm, apply)
         self.stats["held_max"] = max(self.stats["held_max"], cb.n_held)

@@ -3,15 +3,32 @@ the receiver-side control buffer.
 
 Heterogeneous NICs differ in ordering: ConnectX RC delivers in order, AWS
 EFA SRD is reliable-but-unordered, and EFA lacks hardware atomics.  The
-receiver CPU proxy therefore (a) tags every message with a 32-bit immediate
-carrying (kind, channel, seq, value), (b) applies *writes* immediately, and
-(c) holds *atomics* in a control buffer until their guard is satisfied:
+receiver CPU proxy therefore (a) tags every message with a 32-bit immediate,
+(b) applies *writes* immediately, and (c) holds *atomics* in a control
+buffer until their guard is satisfied:
 
 - LL completion fence: an atomic covering expert ``e`` with required count
   ``X`` applies only once >= X writes for ``e`` have landed (any order).
 - HT partial ordering: an atomic with sequence ``s`` on channel ``c``
   applies only after all messages with smaller sequence on ``c`` applied —
   ordering is per-channel, never global.
+
+The 32-bit immediate layout is per-kind (DESIGN.md §10).  Sequence-carrying
+kinds (WRITE, SEQ_ATOMIC, BARRIER) pack
+
+    kind(2) | channel(3) | seq(11) | slot(6) | value(10)
+
+while FENCE_ATOMIC — which does not participate in sequence ordering and
+therefore needs no seq field — trades it for a wide count:
+
+    kind(2) | channel(3) | slot(6) | count(21)
+
+so LL fence guards cover receive buckets of up to 2M tokens (the seed
+truncated counts to 6 bits, silently corrupting any bucket > 63).  Wire
+sequences are modulo ``SEQ_MOD``; the receiver unwraps them against the
+highest sequence seen per channel, which is safe while delivery displacement
+stays below ``SEQ_MOD // 4`` arrivals (the network model bounds its reorder
+window accordingly).
 """
 from __future__ import annotations
 
@@ -25,20 +42,44 @@ class ImmKind(IntEnum):
     WRITE = 0          # data write notification
     FENCE_ATOMIC = 1   # LL: apply after `value` writes for expert `slot`
     SEQ_ATOMIC = 2     # HT: apply in per-channel sequence order
-    BARRIER = 3
+    BARRIER = 3        # reserved (applies immediately)
+
+
+N_CHANNELS_MAX = 8           # channel field: 3 bits
+SEQ_MOD = 2048               # seq field: 11 bits (wire sequences wrap)
+IMM_VAL_MAX = 1023           # value field: 10 bits (seq-carrying kinds)
+FENCE_COUNT_MAX = (1 << 21) - 1   # fence count field: 21 bits
+# slot 63 is reserved for writes that must never satisfy a fence guard
+# (combine writes share the per-peer ControlBuffer with dispatch writes;
+# without a reserved slot an early combine write would inflate
+# writes_seen[el] and let expert el's completion fence pass before all of
+# its dispatch writes landed)
+UNFENCED_SLOT = 63
 
 
 def pack_imm(kind: ImmKind, channel: int, seq: int, slot: int, value: int) -> int:
-    """32-bit immediate: kind(2) | channel(6) | seq(12) | slot(6) | value(6)."""
-    assert 0 <= channel < 64 and 0 <= seq < 4096 and 0 <= slot < 64 \
-        and 0 <= value < 64, (channel, seq, slot, value)
-    return (int(kind) & 0x3) | (channel << 2) | (seq << 8) | (slot << 20) | \
-        (value << 26)
+    """32-bit immediate; layout is per-kind (see module docstring).  For
+    FENCE_ATOMIC, ``seq`` must be 0 (fences carry no sequence number) and
+    ``value`` is the required write count (up to :data:`FENCE_COUNT_MAX`)."""
+    assert 0 <= channel < N_CHANNELS_MAX and 0 <= slot < 64, (channel, slot)
+    if kind == ImmKind.FENCE_ATOMIC:
+        assert seq == 0 and 0 <= value <= FENCE_COUNT_MAX, (seq, value)
+        return int(kind) | (channel << 2) | (slot << 5) | (value << 11)
+    assert 0 <= seq < SEQ_MOD and 0 <= value <= IMM_VAL_MAX, (seq, value)
+    return (int(kind) | (channel << 2) | (seq << 5) | (slot << 16)
+            | (value << 22))
+
+
+_IMM_KINDS = (ImmKind.WRITE, ImmKind.FENCE_ATOMIC, ImmKind.SEQ_ATOMIC,
+              ImmKind.BARRIER)   # tuple dispatch: Enum.__call__ is hot
 
 
 def unpack_imm(imm: int) -> tuple[ImmKind, int, int, int, int]:
-    return (ImmKind(imm & 0x3), (imm >> 2) & 0x3F, (imm >> 8) & 0xFFF,
-            (imm >> 20) & 0x3F, (imm >> 26) & 0x3F)
+    kind = _IMM_KINDS[imm & 0x3]
+    if kind is ImmKind.FENCE_ATOMIC:
+        return (kind, (imm >> 2) & 0x7, 0, (imm >> 5) & 0x3F, imm >> 11)
+    return (kind, (imm >> 2) & 0x7, (imm >> 5) & 0x7FF, (imm >> 16) & 0x3F,
+            imm >> 22)
 
 
 @dataclass(order=True)
@@ -52,17 +93,19 @@ class ControlBuffer:
     """Receiver-side guard state for one peer connection.
 
     ``writes_seen[slot]`` counts landed writes per expert slot (LL fence);
-    ``applied_seq[channel]`` tracks the next expected sequence (HT order).
-    Held atomics live in per-channel min-heaps keyed by sequence.
+    ``next_seq[channel]`` tracks the next expected (unwrapped) sequence (HT
+    order).  Held atomics live in per-channel min-heaps keyed by sequence.
     """
 
-    def __init__(self, n_slots: int = 64, n_channels: int = 64):
+    def __init__(self, n_slots: int = 64, n_channels: int = N_CHANNELS_MAX):
         self.writes_seen = [0] * n_slots
         self.next_seq = [0] * n_channels
+        self._hi_seq = [0] * n_channels        # unwrap anchor per channel
         self._arrived: dict[int, list[int]] = {}   # per-channel seq min-heaps
         self.held_seq: dict[int, list[_Held]] = {}
         self.held_fence: list[tuple[int, int, int, Callable]] = []
         self.applied_log: list[int] = []     # imm values, in application order
+        self._held = 0                       # incremental count (hot path)
         self.held_peak = 0
 
     # ------------------------------------------------------------ events --
@@ -72,10 +115,11 @@ class ControlBuffer:
         assert kind == ImmKind.WRITE
         apply()
         self.writes_seen[slot] += 1
-        self._bump_seq(ch, seq)
+        self._bump_seq(ch, self._unwrap(ch, seq))
         self.applied_log.append(imm)
-        self._drain(ch)
-        self._drain_fences()
+        if self._held:          # guard the (common) nothing-held fast path
+            self._drain(ch)
+            self._drain_fences()
 
     def on_atomic(self, imm: int, apply: Callable[[], None]) -> None:
         kind, ch, seq, slot, value = unpack_imm(imm)
@@ -85,24 +129,39 @@ class ControlBuffer:
                 self.applied_log.append(imm)
             else:
                 self.held_fence.append((slot, value, imm, apply))
-                self.held_peak = max(self.held_peak,
-                                     len(self.held_fence) + self._n_held_seq())
+                self._held += 1
+                if self._held > self.held_peak:
+                    self.held_peak = self._held
         elif kind == ImmKind.SEQ_ATOMIC:
-            if self.next_seq[ch] >= seq:
+            full = self._unwrap(ch, seq)
+            if self.next_seq[ch] >= full:
                 apply()
                 self.applied_log.append(imm)
-                self._bump_seq(ch, seq)
+                self._bump_seq(ch, full)
                 self._drain(ch)
             else:
                 heapq.heappush(self.held_seq.setdefault(ch, []),
-                               _Held(seq, imm, apply))
-                self.held_peak = max(self.held_peak,
-                                     len(self.held_fence) + self._n_held_seq())
+                               _Held(full, imm, apply))
+                self._held += 1
+                if self._held > self.held_peak:
+                    self.held_peak = self._held
         else:
             apply()
             self.applied_log.append(imm)
 
     # ----------------------------------------------------------- helpers --
+    def _unwrap(self, ch: int, wire_seq: int) -> int:
+        """Reconstruct the full sequence from its SEQ_MOD-wrapped wire form,
+        nearest to the highest sequence seen on this channel.  Correct while
+        delivery displacement < SEQ_MOD // 4 arrivals (network guarantee)."""
+        hi = self._hi_seq[ch]
+        diff = ((wire_seq - hi + SEQ_MOD // 2) % SEQ_MOD) - SEQ_MOD // 2
+        full = hi + diff
+        assert full >= 0, (ch, wire_seq, hi)
+        if full > hi:
+            self._hi_seq[ch] = full
+        return full
+
     def _bump_seq(self, ch: int, seq: int) -> None:
         # sequences are assigned consecutively per channel by the sender;
         # next_seq advances over the contiguous prefix of *applied* seqs
@@ -119,23 +178,24 @@ class ControlBuffer:
         while heap and heap[0].seq <= self.next_seq[ch]:
             h = heapq.heappop(heap)
             h.apply()
+            self._held -= 1
             self.applied_log.append(h.imm)
             self._bump_seq(ch, h.seq)
         self._drain_fences()
 
     def _drain_fences(self) -> None:
+        if not self.held_fence:
+            return
         still = []
         for slot, value, imm, apply in self.held_fence:
             if self.writes_seen[slot] >= value:
                 apply()
+                self._held -= 1
                 self.applied_log.append(imm)
             else:
                 still.append((slot, value, imm, apply))
         self.held_fence = still
 
-    def _n_held_seq(self) -> int:
-        return sum(len(v) for v in self.held_seq.values())
-
     @property
     def n_held(self) -> int:
-        return len(self.held_fence) + self._n_held_seq()
+        return self._held

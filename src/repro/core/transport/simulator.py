@@ -1,15 +1,36 @@
-"""Network model: reliable transports with configurable ordering.
+"""Network model: event-driven time, reliable transports, configurable order.
 
 - "rc":  reliable, per-QP in-order delivery (ConnectX RC).
 - "srd": reliable, UNORDERED delivery (AWS EFA SRD): any in-flight message
   may be delivered next (bounded by a reorder window for realism).
 
-Delivery is deterministic under a seed.  Latency/bandwidth accounting gives
-the benchmarks a cost model (paper Fig. 7/15 reproductions).
+The network is a heap-ordered event queue (DESIGN.md §10): ``send`` computes
+an arrival timestamp and schedules the message; ``step``/``run_until``
+deliver events in timestamp order, advancing ``clock_us``.  Consumers (the
+EP executor) interleave delivery with work — expert FFNs launch for a
+receive bucket the moment its completion fence applies, while other buckets'
+writes are still in flight.
+
+Latency accounting (honest units, replacing the seed's ad-hoc
+``base_latency_us * 0.01`` per-message fudge):
+
+- each (src, dst) link serialises: a message starts transmitting when the
+  link frees, takes ``(size + hdr_bytes) / bw_bytes_per_us`` on the wire
+  (``hdr_bytes`` models per-message header/immediate overhead, so zero-byte
+  atomics still occupy a wire slot),
+- propagation adds ``base_latency_us`` once per message (NOT accumulated
+  across messages — links are parallel),
+- srd adds a seeded jitter of up to ``reorder_window`` own-size wire slots,
+  so a message can be overtaken by at most ~``reorder_window`` later
+  messages of its size class (the same bounded-displacement semantics the
+  seed's shuffle had, now in the time domain).
+
+Delivery is deterministic under a seed.
 """
 from __future__ import annotations
 
 import heapq
+import threading
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -21,11 +42,12 @@ class Message:
     src: int
     dst: int
     qp: int
-    kind: str            # "write" | "imm" (atomic-as-immediate) | "barrier"
+    kind: str            # "write" | "imm" (atomic-as-immediate)
     dst_off: int
     payload: Optional[np.ndarray]
     imm: Optional[int]
     inject_t: float = 0.0
+    deliver_t: float = 0.0
     size: int = 0
 
 
@@ -35,56 +57,120 @@ class NetConfig:
     reorder_window: int = 64     # srd: max messages a later one can overtake
     base_latency_us: float = 5.0
     bw_bytes_per_us: float = 25_000.0   # ~200 Gbit/s
+    hdr_bytes: int = 64          # per-message wire overhead (header + imm)
     seed: int = 0
 
 
 class Network:
-    """Central message switch.  ``flush`` delivers everything currently in
-    flight to the registered receivers, in transport order."""
+    """Central message switch with an event-driven clock.
 
-    def __init__(self, cfg: NetConfig, n_ranks: int):
+    ``send`` schedules delivery at ``inject_t + serialization + latency``
+    (+ bounded srd jitter); ``step`` delivers the earliest scheduled message
+    to its registered receiver; ``run_until``/``flush`` drain in timestamp
+    order.  Thread-safe: proxies may ``send`` from worker threads while one
+    pump thread steps.
+    """
+
+    def __init__(self, cfg: NetConfig, n_ranks: int, threadsafe: bool = True):
+        # seq unwrap at the receiver (semantics.ControlBuffer) tolerates
+        # displacement < SEQ_MOD // 4 = 512 arrivals
+        assert cfg.reorder_window < 512, "reorder_window must be < 512"
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
         self.n_ranks = n_ranks
-        self.queues: dict[tuple[int, int], list[Message]] = {}
         self.receivers: dict[int, Callable[[Message], None]] = {}
+        self._heap: list[tuple[float, int, Message]] = []
+        self._order = 0                       # FIFO tiebreak for equal times
+        self._link_free: dict[tuple[int, int], float] = {}
+        # lock elision for the (deterministic) single-threaded executor:
+        # every send/step pays two lock ops otherwise
+        self._lock = threading.Lock() if threadsafe else None
+        self._srd = cfg.mode == "srd"
+        self._jit: list[int] = []             # batched reorder-jitter draws
         self.delivered = 0
         self.bytes_moved = 0
         self.clock_us = 0.0
+        self.on_deliver_hook: Optional[Callable[[Message], None]] = None
 
     def register(self, rank: int, on_deliver: Callable[[Message], None]):
         self.receivers[rank] = on_deliver
 
-    def send(self, msg: Message):
+    # ------------------------------------------------------------- sending --
+    def _jitter(self) -> int:
+        if not self._jit:
+            self._jit = self.rng.integers(
+                0, self.cfg.reorder_window + 1, size=4096).tolist()
+        return self._jit.pop()
+
+    def _schedule(self, msg: Message):
         msg.size = 0 if msg.payload is None else msg.payload.nbytes
+        cfg = self.cfg
+        tx = (msg.size + cfg.hdr_bytes) / cfg.bw_bytes_per_us
+        link = (msg.src, msg.dst)
         msg.inject_t = self.clock_us
-        self.queues.setdefault((msg.src, msg.dst), []).append(msg)
+        free = self._link_free.get(link, 0.0)
+        start = free if free > msg.inject_t else msg.inject_t
+        self._link_free[link] = start + tx
+        arrival = start + tx + cfg.base_latency_us
+        if self._srd:
+            # jitter in units of this message's own wire slot: a message
+            # can be overtaken by at most ~reorder_window later ones
+            arrival += self._jitter() * tx
+        msg.deliver_t = arrival
+        self._order += 1
+        heapq.heappush(self._heap, (arrival, self._order, msg))
+
+    def send(self, msg: Message):
+        if self._lock is None:
+            self._schedule(msg)
+        else:
+            with self._lock:
+                self._schedule(msg)
+
+    # ------------------------------------------------------------ delivery --
+    @property
+    def pending(self) -> int:
+        return len(self._heap)
+
+    def next_event_t(self) -> Optional[float]:
+        return self._heap[0][0] if self._heap else None
+
+    def step(self) -> bool:
+        """Deliver the earliest in-flight message (advances the clock).
+        Returns False when nothing is in flight."""
+        lock = self._lock
+        if lock is not None:
+            lock.acquire()
+        try:
+            heap = self._heap
+            if not heap:
+                return False
+            t, _, m = heapq.heappop(heap)
+            if t > self.clock_us:
+                self.clock_us = t
+            self.bytes_moved += m.size
+            self.delivered += 1
+        finally:
+            if lock is not None:
+                lock.release()
+        # deliver OUTSIDE the lock: receivers may trigger further sends
+        self.receivers[m.dst](m)
+        if self.on_deliver_hook is not None:
+            self.on_deliver_hook(m)
+        return True
+
+    def run_until(self, t: float) -> int:
+        """Deliver every message scheduled at or before ``t``."""
+        n = 0
+        while True:
+            nxt = self.next_event_t()
+            if nxt is None or nxt > t:
+                return n
+            self.step()
+            n += 1
 
     def flush(self, steps: Optional[int] = None):
-        """Deliver in-flight messages.  rc: FIFO per (src,dst,qp); srd:
-        seeded shuffle within the reorder window."""
-        for key in sorted(self.queues):
-            q = self.queues[key]
-            if not q:
-                continue
-            if self.cfg.mode == "rc":
-                order = list(range(len(q)))
-            else:
-                order = self._srd_order(len(q))
-            for i in order:
-                m = q[i]
-                self.clock_us += self.cfg.base_latency_us * 0.01 + \
-                    m.size / self.cfg.bw_bytes_per_us
-                self.bytes_moved += m.size
-                self.delivered += 1
-                self.receivers[m.dst](m)
-            q.clear()
-
-    def _srd_order(self, n: int) -> list[int]:
-        w = self.cfg.reorder_window
-        order = list(range(n))
-        # bounded random displacement: swap each element with one up to w away
-        for i in range(n - 1, 0, -1):
-            j = int(self.rng.integers(max(0, i - w), i + 1))
-            order[i], order[j] = order[j], order[i]
-        return order
+        """Deliver everything currently in flight (and anything scheduled by
+        the deliveries themselves), in timestamp order."""
+        while self.step():
+            pass

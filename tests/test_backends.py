@@ -38,9 +38,15 @@ def test_registry_contents():
         get_backend("no_such_transport")
 
 
+@pytest.mark.parametrize("net", ["rc", "srd"])
 @pytest.mark.parametrize("mode", ["ll", "ht"])
 @pytest.mark.parametrize("seed,e,k,t", [(0, 8, 2, 32), (1, 4, 3, 16)])
-def test_backends_match_oracle_and_each_other(mode, seed, e, k, t):
+def test_backends_match_oracle_and_each_other(mode, net, seed, e, k, t):
+    """ISSUE 2 acceptance: both protocol modes, on both backends, under
+    both ordered (rc) and unordered (srd) network configs, match the dense
+    oracle and each other."""
+    from repro.core.transport.simulator import NetConfig
+
     x, ti, tw, wg, wu, wd = _problem(seed, e, k, t)
 
     # --- jax_collectives under a degenerate (1,) mesh ---------------------
@@ -60,8 +66,10 @@ def test_backends_match_oracle_and_each_other(mode, seed, e, k, t):
 
     # --- simulated_rdma over the transport substrate, degree 4 ------------
     spec_sim = EPSpec(axes=("sim",), sizes=(4,), n_experts=e, top_k=k,
-                      mode=mode)
-    sb = get_backend("simulated_rdma")
+                      mode=mode, chunks=2)
+    sb = get_backend("simulated_rdma",
+                     net_cfg=NetConfig(mode=net, seed=seed,
+                                       reorder_window=64))
     wg_n, wu_n, wd_n = (np.asarray(w, np.float32) for w in (wg, wu, wd))
     res_sim = sb.dispatch_combine(
         spec_sim, np.asarray(x), np.asarray(ti), np.asarray(tw),

@@ -62,13 +62,24 @@ def test_fifo_cached_head_limits_pcie_reads():
 
 
 # ------------------------------------------------------ immediate data ----
-@given(ch=st.integers(0, 63), seq=st.integers(0, 4095), slot=st.integers(0, 63),
-       val=st.integers(0, 63),
-       kind=st.sampled_from(list(ImmKind)))
+@given(ch=st.integers(0, 7), seq=st.integers(0, 2047), slot=st.integers(0, 63),
+       val=st.integers(0, 1023),
+       kind=st.sampled_from([ImmKind.WRITE, ImmKind.SEQ_ATOMIC,
+                             ImmKind.BARRIER]))
 def test_imm_codec_roundtrip(ch, seq, slot, val, kind):
     imm = pack_imm(kind, ch, seq, slot, val)
     assert 0 <= imm < 2 ** 32
     assert unpack_imm(imm) == (kind, ch, seq, slot, val)
+
+
+@given(ch=st.integers(0, 7), slot=st.integers(0, 63),
+       count=st.integers(0, (1 << 21) - 1))
+def test_imm_codec_fence_wide_count(ch, slot, count):
+    """Fences trade the (unused) seq field for a 21-bit write count — the
+    seed's 6-bit field silently corrupted any bucket larger than 63."""
+    imm = pack_imm(ImmKind.FENCE_ATOMIC, ch, 0, slot, count)
+    assert 0 <= imm < 2 ** 32
+    assert unpack_imm(imm) == (ImmKind.FENCE_ATOMIC, ch, 0, slot, count)
 
 
 # --------------------------------------------------- control buffer -------
@@ -91,7 +102,7 @@ def test_fence_atomic_never_applies_early(data, n_writes, seed):
     after >= X writes to its expert slot have applied."""
     rng = np.random.default_rng(seed)
     slot = 3
-    writes = [("w", pack_imm(ImmKind.WRITE, ch % 64, s, slot, 0))
+    writes = [("w", pack_imm(ImmKind.WRITE, ch % 8, s, slot, 0))
               for s, ch in enumerate(range(n_writes))]
     fence = ("a", pack_imm(ImmKind.FENCE_ATOMIC, 0, 0, slot, n_writes))
     events = writes + [fence]
@@ -184,3 +195,137 @@ def test_ep_protocol_property_random_routing(seed):
     out = w.run(x, ti, tw, wg, wu, wd)
     ref = EPWorld.oracle(x, ti, tw, wg, wu, wd)
     np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+
+def _problem(seed, R, E, K, D, F, Tl):
+    # the one seeded EP-problem generator, shared with the transport benches
+    from benchmarks.common import make_ep_problem
+    return make_ep_problem(seed, R, E, K, D, F, Tl, scale=0.2)
+
+
+@pytest.mark.parametrize("mode", ["rc", "srd"])
+def test_ll_fence_counts_beyond_63(mode):
+    """Regression for the 6-bit fence-count truncation: buckets holding
+    >= 64 tokens must fence (and therefore combine) correctly.  The seed
+    packed min(count, 63) into the immediate, so a 100-token bucket's guard
+    passed ~40 writes early under reorder."""
+    from repro.core.plan import make_world_plan
+
+    R, E, K, D, F, Tl = 2, 2, 2, 8, 8, 96
+    x, ti, tw, wg, wu, wd = _problem(11, R, E, K, D, F, Tl)
+    assert int(make_world_plan(ti, E, Tl * K).counts.max()) >= 64
+    w = EPWorld(n_ranks=R, n_experts=E, top_k=K, d=D, f=F, capacity=Tl * K,
+                net_cfg=NetConfig(mode=mode, seed=5, reorder_window=128))
+    out = w.run(x, ti, tw, wg, wu, wd)
+    ref = EPWorld.oracle(x, ti, tw, wg, wu, wd)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_ll_combine_writes_cannot_satisfy_dispatch_fences():
+    """Regression: combine writes share the per-peer ControlBuffer with that
+    peer's own dispatch writes.  They must carry the reserved unfenced slot —
+    otherwise an early expert's combine stream inflates writes_seen[0] and an
+    el=0 expert's fence passes before its dispatch bucket is complete.
+    eps=1 puts every expert at slot 0; crossed routing makes one expert
+    finish (and start combining) while the other's dispatches are in flight;
+    a huge reorder window lets combines overtake them."""
+    R, E, K, D, F, Tl = 2, 2, 1, 256, 8, 32
+    rng = np.random.default_rng(6)
+    x = rng.standard_normal((R, Tl, D)).astype(np.float32)
+    ti = np.zeros((R, Tl, K), np.int32)
+    ti[0] = 1
+    tw = np.ones((R, Tl, K), np.float32)
+    wg = (rng.standard_normal((E, D, F)) * 0.05).astype(np.float32)
+    wu = (rng.standard_normal((E, D, F)) * 0.05).astype(np.float32)
+    wd = (rng.standard_normal((E, F, D)) * 0.05).astype(np.float32)
+    ref = EPWorld.oracle(x, ti, tw, wg, wu, wd)
+    for seed in range(8):
+        w = EPWorld(n_ranks=R, n_experts=E, top_k=K, d=D, f=F,
+                    capacity=Tl * K,
+                    net_cfg=NetConfig(mode="srd", seed=seed,
+                                      reorder_window=500))
+        out = w.run(x, ti, tw, wg, wu, wd)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------- HT mode on the substrate --
+@pytest.mark.parametrize("mode", ["rc", "srd"])
+@pytest.mark.parametrize("n_chunks", [1, 4])
+def test_ht_protocol_matches_oracle(mode, n_chunks):
+    """Chunked dedup'd dispatch + hierarchical reduce, executed literally on
+    the substrate (SEQ_ATOMIC chunk boundaries), matches the dense oracle
+    under both ordered and unordered delivery."""
+    R, E, K, D, F, Tl = 4, 8, 3, 16, 24, 12
+    x, ti, tw, wg, wu, wd = _problem(2, R, E, K, D, F, Tl)
+    w = EPWorld(n_ranks=R, n_experts=E, top_k=K, d=D, f=F,
+                net_cfg=NetConfig(mode=mode, seed=7, reorder_window=64))
+    out = w.run_ht(x, ti, tw, wg, wu, wd, n_chunks=n_chunks)
+    ref = EPWorld.oracle(x, ti, tw, wg, wu, wd)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+    assert w.ht_dropped == 0
+
+
+def test_ht_generic_expert_fn_matches_oracle():
+    """The grouped (E, N, D) expert_fn contract works per HT bucket too."""
+    from repro.core.transport.ep_executor import np_grouped_swiglu
+
+    R, E, K, D, F, Tl = 2, 4, 2, 8, 8, 8
+    x, ti, tw, wg, wu, wd = _problem(3, R, E, K, D, F, Tl)
+    w = EPWorld(n_ranks=R, n_experts=E, top_k=K, d=D,
+                net_cfg=NetConfig(mode="srd", seed=1))
+    out = w.run_ht(x, ti, tw, n_chunks=2,
+                   expert_fn=lambda t: np_grouped_swiglu(t, wg, wu, wd))
+    ref = EPWorld.oracle(x, ti, tw, wg, wu, wd)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+
+# ----------------------------------- pipelined dispatch/compute overlap ---
+@pytest.mark.parametrize("protocol", ["ll", "ht"])
+def test_compute_overlaps_dispatch_on_event_clock(protocol):
+    """The pipelined state machine launches expert FFN for a ready bucket
+    while other buckets' dispatch writes are still in flight: on the event
+    clock, the first compute must start before the last dispatch write is
+    delivered."""
+    R, E, K, D, F, Tl = 4, 16, 4, 16, 16, 32
+    x, ti, tw, wg, wu, wd = _problem(4, R, E, K, D, F, Tl)
+    w = EPWorld(n_ranks=R, n_experts=E, top_k=K, d=D, f=F, capacity=Tl * K,
+                net_cfg=NetConfig(mode="srd", seed=9, reorder_window=32))
+    if protocol == "ll":
+        out = w.run(x, ti, tw, wg, wu, wd)
+    else:
+        out = w.run_ht(x, ti, tw, wg, wu, wd, n_chunks=4)
+    ref = EPWorld.oracle(x, ti, tw, wg, wu, wd)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+    tl = w.timeline
+    assert tl["first_compute_us"] is not None
+    assert tl["first_compute_us"] < tl["last_dispatch_write_us"], tl
+    assert tl["overlap_us"] > 0.0
+
+
+# --------------------------------------------- SRD reorder-window stress --
+@pytest.mark.parametrize("protocol", ["ll", "ht"])
+def test_srd_reorder_window_sweep(protocol):
+    """Exactness under growing reorder pressure: every window size matches
+    the dense oracle bit-for-bit-in-float, and the receiver control buffer
+    holds more guarded atomics as the window widens."""
+    R, E, K, D, F, Tl = 4, 8, 4, 8, 8, 24
+    held_by_window = {}
+    for window in (1, 16, 256):
+        held = 0
+        for seed in (0, 1, 2):
+            x, ti, tw, wg, wu, wd = _problem(seed, R, E, K, D, F, Tl)
+            w = EPWorld(n_ranks=R, n_experts=E, top_k=K, d=D, f=F,
+                        capacity=Tl * K,
+                        net_cfg=NetConfig(mode="srd", seed=seed,
+                                          reorder_window=window))
+            if protocol == "ll":
+                out = w.run(x, ti, tw, wg, wu, wd)
+            else:
+                out = w.run_ht(x, ti, tw, wg, wu, wd, n_chunks=4)
+            ref = EPWorld.oracle(x, ti, tw, wg, wu, wd)
+            np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+            held += sum(p.stats["held_max"] for p in w.proxies)
+        held_by_window[window] = held
+    assert held_by_window[16] >= held_by_window[1], held_by_window
+    assert held_by_window[256] >= held_by_window[16], held_by_window
+    assert held_by_window[256] > held_by_window[1], held_by_window
