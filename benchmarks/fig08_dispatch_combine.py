@@ -4,7 +4,7 @@ bytes-on-wire (derived column) showing dedup + hierarchical-reduce savings.
 
 Run via ``python -m benchmarks.run`` (it spawns this with 8 devices).
 """
-import functools
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -26,18 +26,33 @@ def build(mesh, axes, mode, n_tokens_global, chunks=1):
                   capacity_factor=2.0, chunks=chunks, dtype=jnp.bfloat16)
     ep_p = axes if len(axes) > 1 else axes[0]
 
-    def island(x, ti, tw, wg, wu, wd):
+    def island(x, ti, tw, wg, wu, wd, with_aux):
         fn = {"ll": dispatch_combine_ll, "ht": dispatch_combine_ht}.get(mode)
         if fn is None:
-            return moe_nccl_bulk(spec, x, ti, tw, wg, wu, wd)
-        return fn(spec, x, ti, tw,
-                  lambda t: grouped_swiglu_ref(t, wg, wu, wd)).out
+            out = moe_nccl_bulk(spec, x, ti, tw, wg, wu, wd)
+            return (out, jnp.float32(0.0), jnp.float32(1.0)) if with_aux \
+                else out
+        # occupancy-carrying expert_fn contract; the jnp ref needs no mask
+        # (EP buffers pad with exact zeros), the kernel paths skip the rows
+        r = fn(spec, x, ti, tw,
+               lambda t, c=None: grouped_swiglu_ref(t, wg, wu, wd))
+        if not with_aux:
+            return r.out
+        ax = axes if len(axes) > 1 else axes[0]
+        return (r.out, jax.lax.pmean(r.aux["dropped"], ax),
+                jax.lax.pmean(jnp.float32(r.aux["occupancy"]), ax))
 
+    in_specs = (P(axes), P(axes), P(axes), P(ep_p, None, None),
+                P(ep_p, None, None), P(ep_p, None, None))
+    # the timed function returns only `out` (the aux pmean collectives are
+    # dead-code-eliminated, keeping the timing comparable across PRs); the
+    # aux scalars for the derived column come from one separate call
     f = jax.jit(jax.shard_map(
-        island, mesh=mesh,
-        in_specs=(P(axes), P(axes), P(axes), P(ep_p, None, None),
-                  P(ep_p, None, None), P(ep_p, None, None)),
+        partial(island, with_aux=False), mesh=mesh, in_specs=in_specs,
         out_specs=P(axes), check_vma=False))
+    f_aux = jax.jit(jax.shard_map(
+        partial(island, with_aux=True), mesh=mesh, in_specs=in_specs,
+        out_specs=(P(axes), P(), P()), check_vma=False))
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 6)
     x = jax.random.normal(ks[0], (n_tokens_global, D), jnp.bfloat16)
@@ -48,7 +63,15 @@ def build(mesh, axes, mode, n_tokens_global, chunks=1):
     wu = (jax.random.normal(ks[4], (E, D, F)) * 0.1).astype(jnp.bfloat16)
     wd = (jax.random.normal(ks[5], (E, F, D)) * 0.1).astype(jnp.bfloat16)
     args = (x, ti, tw, wg, wu, wd)
-    return lambda: jax.block_until_ready(f(*args))
+
+    def run():
+        jax.block_until_ready(f(*args))
+
+    def aux():
+        _, dropped, occ = f_aux(*args)
+        return float(dropped), float(occ)
+    run.aux = aux
+    return run
 
 
 def wire_bytes_model(n_tokens, mode, P_ep=8, pods=2):
@@ -72,21 +95,23 @@ def main():
                 fn = build(mesh, ("model",), mode, n,
                            chunks=2 if mode == "ht" and n >= 512 else 1)
                 us = timeit(fn, warmup=2, iters=5)
+                dropped, occ = fn.aux()
             except Exception as e:  # noqa: BLE001
                 emit(f"fig08_dispatch_combine/{mode}/tokens={n}", float("nan"),
                      f"error:{type(e).__name__}")
                 continue
             wb = wire_bytes_model(n, mode)
             emit(f"fig08_dispatch_combine/{mode}/tokens={n}", us,
-                 f"wire_bytes={wb}")
+                 f"wire_bytes={wb},occupancy={occ:.3f},dropped={dropped:.4f}")
     # two-level (pod x model) HT: the hierarchical/dedup path (Fig. 12 analog)
     mesh2 = jax.make_mesh((2, 4), ("pod", "model"),
                           axis_types=(AxisType.Auto,) * 2)
     for n in (512, 2048):
         fn = build(mesh2, ("pod", "model"), "ht", n, chunks=2)
         us = timeit(fn, warmup=2, iters=5)
+        dropped, occ = fn.aux()
         emit(f"fig08_dispatch_combine/ht2level/tokens={n}", us,
-             "hierarchical+dedup")
+             f"hierarchical+dedup,occupancy={occ:.3f},dropped={dropped:.4f}")
 
 
 if __name__ == "__main__":

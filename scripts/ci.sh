@@ -13,12 +13,19 @@ python -m pip install -e '.[dev]' 2>/dev/null \
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 
+# Bounded interpret-mode step: execute the Pallas kernel bodies (not just
+# the jnp refs) through the ops-level mode dispatch on every run.
+REPRO_KERNEL_MODE=interpret PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q tests/test_kernel_modes.py
+
 # Benchmark smoke: one host benchmark end-to-end, plus the machine-readable
-# results file the perf trajectory is tracked with across PRs.
+# results file the perf trajectory is tracked with across PRs, gated
+# against the committed baseline (fails on >25% us_per_call regressions).
 BENCH_JSON="$(mktemp -t bench_smoke.XXXXXX.json)"
 trap 'rm -f "$BENCH_JSON"' EXIT
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --only fig15 --json "$BENCH_JSON" > /dev/null
+    python -m benchmarks.run --only fig15 --json "$BENCH_JSON" \
+    --compare BENCH_results.json > /dev/null
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} BENCH_JSON="$BENCH_JSON" python - <<'EOF'
 import json, os
 from benchmarks.run import validate_results

@@ -31,6 +31,8 @@ from typing import Callable, Dict, Protocol, runtime_checkable
 
 import numpy as np
 
+from repro.core import plan as planlib
+
 
 @runtime_checkable
 class EPBackend(Protocol):
@@ -123,8 +125,8 @@ class SimulatedRDMABackend:
         assert T % R == 0, f"token count {T} not divisible by EP degree {R}"
         Tl = T // R
 
-        def global_expert_fn(toks):
-            out = expert_fn(toks)
+        def global_expert_fn(toks, counts=None):
+            out = planlib.call_expert_fn(expert_fn, toks, counts)
             return np.asarray(out, np.float32)
 
         world = EPWorld(n_ranks=R, n_experts=spec.n_experts, top_k=K, d=D,

@@ -77,7 +77,13 @@ class EPSpec:
 
 class DispatchResult(NamedTuple):
     out: Array          # (T, D) combined expert outputs
-    aux: dict           # {"dropped": scalar fraction, ...}
+    aux: dict           # {"dropped": scalar fraction, "occupancy": ..., ...}
+
+
+# occupancy-carrying expert_fn contract dispatch: ``fn(tokens, counts)``
+# where counts are the per-expert (or per-bucket, shape (E_local, B))
+# occupied row counts; legacy single-argument callables still work
+_call_expert_fn = planlib.call_expert_fn
 
 
 def _cap(n: float, cf: float, hard_max: int, multiple: int = 8) -> int:
@@ -124,19 +130,33 @@ def dispatch_combine_ll(spec: EPSpec, x: Array, top_idx: Array, top_w: Array,
                           tiled=True)                  # (P, eps*C, D)
     recv = recv.reshape(P, eps, C, D).transpose(1, 0, 2, 3).reshape(eps, P * C, D)
 
-    out_e = expert_fn(recv)                            # (eps, P*C, D)
+    # occupancy exchange: each source's per-(dest expert) occupied counts —
+    # the same metadata the paper's completion fences carry — so the expert
+    # kernel can skip the capacity padding (§Perf: occupancy-aware compute).
+    # recv bucket layout is (local expert, source bucket): counts (eps, P).
+    cnt_send = jnp.minimum(pl.counts, C).reshape(P, eps)
+    cnt_recv = lax.all_to_all(cnt_send, spec.flat_axis(), split_axis=0,
+                              concat_axis=0, tiled=True)       # (P, eps)
+    out_e = _call_expert_fn(expert_fn, recv, cnt_recv.T)  # (eps, P*C, D)
 
     back = out_e.reshape(eps, P, C, D).transpose(1, 0, 2, 3).reshape(P, eps * C, D)
     back = lax.all_to_all(back, spec.flat_axis(), split_axis=0, concat_axis=0,
                           tiled=True)
     back = back.reshape(E * C, D)
 
-    gathered = jnp.where(keep[:, None], back[jnp.where(keep, flat_e * C + rank, 0)],
-                         0).reshape(T, K, D)
-    out = jnp.einsum("tkd,tk->td", gathered.astype(jnp.float32),
-                     top_w.astype(jnp.float32))
+    # combine: weighted fp32 segment-sum over the T*K kept choices — no
+    # (T, K, D) fp32 materialization + einsum, and no touching the (mostly
+    # padded) E*C slot space: each choice gathers its slot's row and
+    # scatter-adds into its token (dropped choices add 0 via the scratch row)
+    w_flat = jnp.where(keep, top_w.reshape(-1).astype(jnp.float32), 0.0)
+    contrib = back[jnp.where(keep, flat_e * C + rank, 0)].astype(
+        jnp.float32) * w_flat[:, None]
+    out = jnp.zeros((T + 1, D), jnp.float32).at[
+        jnp.where(keep, rows, T)].add(contrib)[:-1]
     dropped = pl.n_dropped / jnp.maximum(valid.sum(), 1)
-    return DispatchResult(out.astype(x.dtype), {"dropped": dropped})
+    occupancy = jnp.minimum(pl.counts, C).sum() / (E * C)
+    return DispatchResult(out.astype(x.dtype),
+                          {"dropped": dropped, "occupancy": occupancy})
 
 
 # =========================================================== HT mode ======
@@ -146,9 +166,8 @@ class _GroupPlan(NamedTuple):
     send_x: Array       # (G, C, D) token payloads
     send_eid: Array     # (G, C, K) expert ids local to the dest group (-1 pad)
     send_w: Array       # (G, C, K) combine weights
-    entry_slot: Array   # (T,) per source token: rank within each group, or -1
-                        # -- stored as (T, G) ranks for combine scatter
-    entry_valid: Array  # (T, G) bool: token has an entry in group g
+    src_of_slot: Array  # (G*C,) source token row per slot (T for empty) —
+                        # drives both payload packing and the combine scatter
     dropped: Array      # scalar count
 
 
@@ -186,8 +205,7 @@ def _dedup_group_dispatch(x: Array, eid: Array, w: Array, group_of: Array,
         slot_choice, kpos].set(jnp.where(valid, w.astype(jnp.float32), 0.0),
                                mode="drop")[:-1]
     return _GroupPlan(send_x, send_eid.reshape(n_groups, C, K),
-                      send_w.reshape(n_groups, C, K),
-                      jnp.where(keep_tg, rank_tg, -1), keep_tg, dropped)
+                      send_w.reshape(n_groups, C, K), src_of_slot, dropped)
 
 
 def _expert_apply(spec: EPSpec, x_in: Array, eid: Array, w: Array,
@@ -224,48 +242,64 @@ def _expert_apply(spec: EPSpec, x_in: Array, eid: Array, w: Array,
         rows, mode="drop")[:-1]
     x_ext = jnp.concatenate([x_in.astype(spec.dtype),
                              jnp.zeros((1, D), spec.dtype)], axis=0)
-    buf = x_ext[ent_of_slot]
-    out_e = expert_fn(buf.reshape(eps, Ce, D)).reshape(eps * Ce, D)
-    # weighted scatter-add back per entry (intra-node reduce)
     w_of_slot = jnp.zeros((eps * Ce + 1,), jnp.float32).at[slot].set(
         w.reshape(-1).astype(jnp.float32), mode="drop")[:-1]
-    part = jnp.zeros((N + 1, D), jnp.float32).at[
-        jnp.where(w_of_slot != 0, ent_of_slot, N)].add(
-        out_e.astype(jnp.float32) * w_of_slot[:, None], mode="drop")[:-1]
-    return part, (valid & ~keep).sum()
+    counts = jnp.minimum(pl.counts, Ce)       # occupied prefix per expert
+    occupancy = counts.sum() / (eps * Ce)
+    fused = getattr(expert_fn, "fused", None)
+    if fused is not None:
+        # fully fused gather -> expert SwiGLU -> weighted fp32 scatter-add:
+        # neither the (eps, Ce, D) gather buffer nor the expert-output
+        # intermediate is materialized (kernels.gather_swiglu_scatter)
+        part = fused(x_ext, ent_of_slot, w_of_slot, counts)
+    else:
+        buf = x_ext[ent_of_slot]
+        out_e = _call_expert_fn(expert_fn, buf.reshape(eps, Ce, D),
+                                counts).reshape(eps * Ce, D)
+        # weighted scatter-add back per entry (intra-node reduce)
+        part = jnp.zeros((N + 1, D), jnp.float32).at[
+            jnp.where(w_of_slot != 0, ent_of_slot, N)].add(
+            out_e.astype(jnp.float32) * w_of_slot[:, None], mode="drop")[:-1]
+    return part, (valid & ~keep).sum(), occupancy
 
 
 def _combine_scatter(plan: _GroupPlan, ret: Array, T: int) -> Array:
-    """ret: (G, C, D) returned partials; sum entries back per token."""
+    """ret: (G, C, D) returned partials; scatter-add entries back per token.
+
+    Empty slots carry zero partials and point at the scratch row T, so one
+    unmasked fp32 scatter-add replaces the old (T, G, D) gather + where +
+    sum materialization (§Perf: scatter-based combine)."""
     G, C, D = ret.shape
-    flat = ret.reshape(G * C, D)
-    idx = jnp.where(plan.entry_valid & (plan.entry_slot >= 0),
-                    jnp.arange(G)[None] * C + plan.entry_slot, 0)
-    vals = jnp.where((plan.entry_valid & (plan.entry_slot >= 0))[..., None],
-                     flat[idx], 0.0)                    # (T, G, D)
-    return vals.sum(axis=1)
+    out = jnp.zeros((T + 1, D), jnp.float32).at[plan.src_of_slot].add(
+        ret.reshape(G * C, D).astype(jnp.float32))
+    return out[:-1]
 
 
 def dispatch_combine_ht(spec: EPSpec, x: Array, top_idx: Array, top_w: Array,
                         expert_fn: Callable[[Array], Array]) -> DispatchResult:
     """Chunked + dedup'd + hierarchical dispatch/combine (paper HT mode)."""
     T, D = x.shape
-    n_chunks = spec.chunks if T % spec.chunks == 0 else 1
+    n_chunks = planlib.effective_chunks(T, spec.chunks)
     Tc = T // n_chunks
     outs, drops, total = [], jnp.int32(0), jnp.int32(0)
+    occs = []
     for c in range(n_chunks):
         sl = slice(c * Tc, (c + 1) * Tc)
-        o, d = _ht_one_chunk(spec, x[sl], top_idx[sl], top_w[sl], expert_fn)
+        o, d, occ = _ht_one_chunk(spec, x[sl], top_idx[sl], top_w[sl],
+                                  expert_fn)
         outs.append(o)
+        occs.append(occ)
         drops += d
         total += Tc * spec.top_k
     out = jnp.concatenate(outs, axis=0) if n_chunks > 1 else outs[0]
     return DispatchResult(out.astype(x.dtype),
-                          {"dropped": drops / jnp.maximum(total, 1)})
+                          {"dropped": drops / jnp.maximum(total, 1),
+                           "occupancy": sum(occs) / n_chunks,
+                           "chunks": n_chunks})
 
 
 def _ht_one_chunk(spec: EPSpec, x: Array, top_idx: Array, top_w: Array,
-                  expert_fn) -> tuple[Array, Array]:
+                  expert_fn) -> tuple[Array, Array, Array]:
     T, D = x.shape
     K = spec.top_k
     E, eps = spec.n_experts, spec.experts_per_shard
@@ -284,13 +318,14 @@ def _ht_one_chunk(spec: EPSpec, x: Array, top_idx: Array, top_w: Array,
         rx = lax.all_to_all(plan.send_x, spec.axes[0], 0, 0, tiled=True)
         re = lax.all_to_all(plan.send_eid, spec.axes[0], 0, 0, tiled=True)
         rw = lax.all_to_all(plan.send_w, spec.axes[0], 0, 0, tiled=True)
-        part, d2 = _expert_apply(spec, rx.reshape(P * C, D),
-                                 re.reshape(P * C, K), rw.reshape(P * C, K),
-                                 expert_fn, cf, n_tokens_hint=T)
+        part, d2, occ = _expert_apply(spec, rx.reshape(P * C, D),
+                                      re.reshape(P * C, K),
+                                      rw.reshape(P * C, K),
+                                      expert_fn, cf, n_tokens_hint=T)
         ret = lax.all_to_all(part.reshape(P, C, D).astype(spec.dtype),
                              spec.axes[0], 0, 0, tiled=True)
         out = _combine_scatter(plan, ret.astype(jnp.float32), T)
-        return out, plan.dropped + d2
+        return out, plan.dropped + d2, occ
 
     # ---- two-level: outer = pod (RDMA domain), inner = model (ICI domain) --
     ax_o, ax_i = spec.axes
@@ -320,9 +355,10 @@ def _ht_one_chunk(spec: EPSpec, x: Array, top_idx: Array, top_w: Array,
     rx2 = lax.all_to_all(plan2.send_x, ax_i, 0, 0, tiled=True)
     re2 = lax.all_to_all(plan2.send_eid, ax_i, 0, 0, tiled=True)
     rw2 = lax.all_to_all(plan2.send_w, ax_i, 0, 0, tiled=True)
-    part, d3 = _expert_apply(spec, rx2.reshape(Pi * C2, D),
-                             re2.reshape(Pi * C2, K), rw2.reshape(Pi * C2, K),
-                             expert_fn, cf, n_tokens_hint=T)
+    part, d3, occ = _expert_apply(spec, rx2.reshape(Pi * C2, D),
+                                  re2.reshape(Pi * C2, K),
+                                  rw2.reshape(Pi * C2, K),
+                                  expert_fn, cf, n_tokens_hint=T)
     # hierarchical combine A: return partials intra-pod, reduce per (t, pod)
     ret2 = lax.all_to_all(part.reshape(Pi, C2, D).astype(spec.dtype),
                           ax_i, 0, 0, tiled=True)
@@ -331,7 +367,7 @@ def _ht_one_chunk(spec: EPSpec, x: Array, top_idx: Array, top_w: Array,
     ret1 = lax.all_to_all(red2.reshape(Po, C1, D).astype(spec.dtype),
                           ax_o, 0, 0, tiled=True)
     out = _combine_scatter(plan1, ret1.astype(jnp.float32), T)
-    return out, plan1.dropped + plan2.dropped + d3
+    return out, plan1.dropped + plan2.dropped + d3, occ
 
 
 # ====================================================== reference oracle ==

@@ -54,8 +54,24 @@ def moe_init(cfg: ModelConfig, key: Array) -> dict:
 
 
 def _expert_fn(wg, wu, wd):
-    def fn(tokens):  # (E_local, C, D)
-        return kops.grouped_swiglu(tokens, wg, wu, wd)
+    """Occupancy-carrying expert_fn: ``fn(tokens, counts)`` applies the
+    grouped SwiGLU skipping rows beyond each bucket's occupied count, and
+    ``fn.fused`` is the fully fused gather->FFN->scatter hot path the HT
+    local compute uses (no (E, C, D) buffer materialization).
+
+    EP dispatch buffers pad with exact zeros (scratch-row gathers), and
+    swiglu(0) == 0 — ``zero_padded=True`` lets the jnp "ref" path skip the
+    (pure-overhead) occupancy mask while the kernel paths use counts to
+    skip the padding's MXU flops (the whole point of the contract)."""
+    def fn(tokens, counts=None):  # (E_local, C, D)
+        return kops.grouped_swiglu(tokens, wg, wu, wd, counts,
+                                   zero_padded=True)
+
+    def fused(x_ext, src_of_slot, w_slot, counts=None):
+        return kops.gather_swiglu_scatter(x_ext, src_of_slot, w_slot,
+                                          wg, wu, wd, counts,
+                                          zero_padded=True)
+    fn.fused = fused
     return fn
 
 
@@ -132,7 +148,8 @@ def _moe_host_sim(cfg: ModelConfig, dist: Optional[DistCtx],
     res = ep_be.dispatch_combine(
         spec, np.asarray(t, np.float32), np.asarray(rout.top_idx),
         np.asarray(rout.top_w, np.float32),
-        lambda toks: np_grouped_swiglu(toks, wg, wu, wd))
+        lambda toks, counts=None: np_grouped_swiglu(toks, wg, wu, wd,
+                                                    counts=counts))
     aux = {"aux_loss": rout.aux_loss,
            "dropped": jnp.float32(res.aux["dropped"]),
            "load": jax.nn.one_hot(rout.top_idx, e_pad).sum((0, 1))}
@@ -169,6 +186,8 @@ def _moe_dist(cfg: ModelConfig, dist: DistCtx, rparams: RouterParams, p: dict,
         aux = {
             "aux_loss": jax.lax.psum(rout.aux_loss, all_axes) / denom,
             "dropped": jax.lax.psum(res.aux["dropped"], all_axes) / denom,
+            "occupancy": jax.lax.psum(
+                jnp.float32(res.aux.get("occupancy", 0.0)), all_axes) / denom,
             "load": jax.lax.psum(
                 jax.nn.one_hot(rout.top_idx, spec.n_experts).sum((0, 1)),
                 all_axes),
@@ -178,7 +197,8 @@ def _moe_dist(cfg: ModelConfig, dist: DistCtx, rparams: RouterParams, p: dict,
     rb = rparams.bias
     if rb is None:
         rb = jnp.zeros((spec.n_experts,), jnp.float32)
-    out_specs = (x_spec, {"aux_loss": P(), "dropped": P(), "load": P()})
+    out_specs = (x_spec, {"aux_loss": P(), "dropped": P(), "occupancy": P(),
+                          "load": P()})
     y, aux = jax.shard_map(
         island, mesh=mesh,
         in_specs=(x_spec, P(None, None), P(None),

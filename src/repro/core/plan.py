@@ -40,6 +40,87 @@ def _xp(a: Array):
     return jnp
 
 
+_ACCEPTS_COUNTS_CACHE: "weakref.WeakKeyDictionary" = None  # lazy init
+
+
+def _accepts_counts(fn) -> bool:
+    """Counts-aware iff the callable takes *args, or its second positional
+    parameter is recognizably the counts slot by NAME: ``counts`` (or the
+    ``c`` shorthand).  Neither arity nor a None default is enough — a
+    legacy fn with an unrelated second parameter (``def fn(tokens,
+    scale=1.0)`` or ``def fn(tokens, rng=None)``) must never silently
+    receive a counts array as that argument."""
+    import inspect
+    try:
+        params = list(inspect.signature(fn).parameters.values())
+    except (TypeError, ValueError):      # no introspectable signature
+        return True                      # assume the current contract
+    if any(p.kind == inspect.Parameter.VAR_POSITIONAL for p in params):
+        return True
+    pos = [p for p in params
+           if p.kind in (inspect.Parameter.POSITIONAL_ONLY,
+                         inspect.Parameter.POSITIONAL_OR_KEYWORD)]
+    return len(pos) >= 2 and pos[1].name in ("counts", "c")
+
+
+def call_expert_fn(fn, tokens: Array, counts: Array):
+    """Invoke an expert_fn with the occupancy-carrying contract
+    ``fn(tokens, counts)``; legacy single-argument callables are detected
+    by signature (never by catching TypeError, which would mask bugs
+    inside a counts-aware fn) and compute over the full buckets.
+
+    Shared by both transports (jax collectives and the numpy substrate) so
+    the contract dispatch cannot drift between them.  The per-callable
+    verdict is memoized (the substrate invokes expert_fns once per bucket
+    launch).
+    """
+    global _ACCEPTS_COUNTS_CACHE
+    if _ACCEPTS_COUNTS_CACHE is None:
+        import weakref
+        _ACCEPTS_COUNTS_CACHE = weakref.WeakKeyDictionary()
+    try:
+        accepts = _ACCEPTS_COUNTS_CACHE.get(fn)
+        if accepts is None:
+            accepts = _ACCEPTS_COUNTS_CACHE[fn] = _accepts_counts(fn)
+    except TypeError:                    # not weakref-able / not hashable
+        accepts = _accepts_counts(fn)
+    return fn(tokens, counts) if accepts else fn(tokens)
+
+
+def occupancy_mask(counts: Array, n_groups: int, width: int) -> Array:
+    """(G, width) bool occupancy mask from per-group occupied counts.
+
+    counts: (G,) occupied-prefix counts — or (G, B) sub-bucket counts where
+    B divides ``width`` and each width//B sub-bucket is occupied-prefix
+    (the post-a2a receive layout: one capacity bucket per source shard).
+    Counts are clipped to the sub-bucket capacity.  Dual-dialect: numpy in,
+    numpy out; jax (incl. tracers) in, jnp out — the single source of the
+    bucket-layout math for the jnp refs, the numpy substrate, and tests.
+    """
+    xp = _xp(counts)
+    counts = counts.astype(xp.int32) if hasattr(counts, "astype") \
+        else xp.asarray(counts, xp.int32)
+    B = 1 if counts.ndim == 1 else counts.shape[1]
+    cb = width // B
+    m = xp.arange(cb)[None, None, :] < xp.minimum(
+        counts.reshape(n_groups, B, 1), cb)
+    return m.reshape(n_groups, width)
+
+
+def effective_chunks(T: int, chunks: int) -> int:
+    """Largest divisor of T that is <= the requested HT chunk count.
+
+    Shared by both transports so their pipelining degrades identically: the
+    seed silently reset any non-dividing chunk request to 1 (no pipelining);
+    degrading to the nearest feasible chunking keeps the pipeline, and the
+    effective value is surfaced (jax path: ``aux["chunks"]``; substrate:
+    ``timeline["n_chunks"]``)."""
+    chunks = max(1, min(chunks, T)) if T else 1
+    while T % chunks:
+        chunks -= 1
+    return chunks
+
+
 # ------------------------------------------------------- slot assignment --
 def rank_in_group(group_id: Array, n_groups: int, valid: Array) -> Array:
     """Arrival-order rank of each row within its group (valid rows only).

@@ -137,13 +137,25 @@ def np_swiglu(x: np.ndarray, wg, wu, wd) -> np.ndarray:
     return (g / (1 + np.exp(-g)) * u) @ wd
 
 
-def np_grouped_swiglu(tokens: np.ndarray, wg, wu, wd) -> np.ndarray:
+def np_grouped_swiglu(tokens: np.ndarray, wg, wu, wd,
+                      counts=None) -> np.ndarray:
     """Vectorized grouped expert FFN: row block e of ``tokens`` (E, N, D)
     goes through expert e's SwiGLU.  Same contract as the jax path's
-    ``expert_fn`` (kernels.ops.grouped_swiglu), in numpy."""
+    ``expert_fn`` (kernels.ops.grouped_swiglu), in numpy: ``counts`` are
+    per-expert — or per-sub-bucket, shape (E, B) — occupied row counts;
+    rows beyond occupancy are zero in and out (swiglu(0) == 0)."""
+    if counts is not None:
+        E, N, _ = tokens.shape
+        mask = planlib.occupancy_mask(np.asarray(counts), E, N)
+        tokens = np.where(mask[..., None], tokens, 0.0)
     g = np.einsum("end,edf->enf", tokens, wg)
     u = np.einsum("end,edf->enf", tokens, wu)
     return np.einsum("enf,efd->end", g / (1 + np.exp(-g)) * u, wd)
+
+
+# occupancy-carrying expert_fn contract dispatch (legacy single-argument
+# callables compute over the full buckets); shared with the jax path
+_call_expert_fn = planlib.call_expert_fn
 
 
 def _to_bytes(a: np.ndarray) -> np.ndarray:
@@ -293,7 +305,9 @@ class EPWorld:
                 return np_swiglu(toks, wg[e], wu[e], wd[e])
             buf = np.zeros((E, len(toks), D), np.float32)
             buf[e] = toks
-            return np.asarray(expert_fn(buf))[e]
+            cnts = np.zeros((E,), np.int32)
+            cnts[e] = len(toks)
+            return np.asarray(_call_expert_fn(expert_fn, buf, cnts))[e]
 
         def launch(e):
             d, el = divmod(e, eps)
@@ -364,7 +378,10 @@ class EPWorld:
         toks = np.concatenate([
             b[:, :, :c_max].transpose(1, 0, 2, 3).reshape(
                 eps, R * c_max, D) for b in bufs], axis=0)
-        outs = np.asarray(expert_fn(toks), np.float32)
+        # (E, R) occupied counts per (expert, source bucket) — the fence
+        # metadata, in the same bucketed layout the jax LL path passes
+        cnts = np.minimum(np.asarray(wp.counts), c_max).T.astype(np.int32)
+        outs = np.asarray(_call_expert_fn(expert_fn, toks, cnts), np.float32)
         assert outs.shape == (E, R * c_max, D), outs.shape
         for d in range(R):      # write outputs back over the receive buckets
             o = outs[d * eps:(d + 1) * eps].reshape(eps, R, c_max, D)
@@ -397,10 +414,10 @@ class EPWorld:
         E, eps, tb = self.n_experts, self.eps, self.tok_bytes
         nc = self.n_channels
         C = capacity or Tl                    # entries per (src, dst) bucket
-        if n_chunks < 1 or Tl % n_chunks:
-            # mirror the jax HT path's fallback for non-dividing chunk
-            # counts; recorded in the timeline so the downgrade is visible
-            n_chunks = 1
+        # mirror the jax HT path: degrade a non-dividing chunk request to
+        # the largest divisor of Tl (recorded in the timeline) instead of
+        # silently dropping the pipeline to one chunk
+        n_chunks = planlib.effective_chunks(Tl, n_chunks)
         # chunk ids ride the 10-bit SEQ_ATOMIC operand field
         assert n_chunks <= IMM_VAL_MAX + 1, \
             f"n_chunks {n_chunks} exceeds the {IMM_VAL_MAX + 1} chunk ids " \
@@ -543,7 +560,8 @@ class EPWorld:
         buf = np.zeros((E, Ce, D), np.float32)
         rank = np.asarray(pl.rank).reshape(-1)
         buf[e_glob, rank] = toks[i_all]
-        y = np.asarray(expert_fn(buf), np.float32)
+        y = np.asarray(_call_expert_fn(
+            expert_fn, buf, np.asarray(pl.counts, np.int32)), np.float32)
         np.add.at(part, i_all,
                   ws[i_all, k_all][:, None].astype(np.float64)
                   * y[e_glob, rank].astype(np.float64))

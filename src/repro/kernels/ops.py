@@ -22,21 +22,84 @@ def _mode(override: str | None = None) -> str:
     return override or KERNEL_MODE
 
 
-def grouped_matmul(x, w, *, mode: str | None = None):
+def grouped_matmul(x, w, counts=None, *, mode: str | None = None):
     m = _mode(mode)
     if m == "ref":
-        return _ref.grouped_matmul_ref(x, w)
+        return _ref.grouped_matmul_ref(x, w, counts=counts)
     from repro.kernels.grouped_matmul import grouped_matmul_pallas
-    return grouped_matmul_pallas(x, w, interpret=(m == "interpret"))
+    return grouped_matmul_pallas(x, w, counts, interpret=(m == "interpret"))
 
 
-def grouped_swiglu(x, w_gate, w_up, w_down, *, mode: str | None = None):
+def grouped_swiglu(x, w_gate, w_up, w_down, counts=None, *,
+                   mode: str | None = None, zero_padded: bool = False):
+    """Grouped expert SwiGLU; ``counts`` are per-expert (or per-sub-bucket,
+    shape (E, B)) occupied row counts — rows beyond occupancy cost no MXU
+    flops on the kernel path and are zero on every path.
+
+    ``zero_padded=True`` declares that rows beyond occupancy are already
+    exact zeros (EP dispatch buffers: scratch-row gathers); since
+    swiglu(0) == 0, the jnp ref then skips the occupancy mask — it would
+    be pure overhead on XLA — while the kernel paths still use counts to
+    skip the padding's flops.
+
+    ``REPRO_SWIGLU_DB=1`` selects the double-buffered variant (manual
+    HBM->VMEM token DMA: occupancy-skipped blocks skip their HBM reads,
+    which the BlockSpec pipeline cannot do); flat counts only.
+    """
     m = _mode(mode)
     if m == "ref":
-        return _ref.grouped_swiglu_ref(x, w_gate, w_up, w_down)
+        return _ref.grouped_swiglu_ref(x, w_gate, w_up, w_down,
+                                       counts=None if zero_padded else counts)
+    flat = counts is None or getattr(counts, "ndim", 1) == 1
+    if os.environ.get("REPRO_SWIGLU_DB") == "1" and flat:
+        from repro.kernels.grouped_matmul import grouped_swiglu_db_pallas
+        return grouped_swiglu_db_pallas(x, w_gate, w_up, w_down, counts,
+                                        interpret=(m == "interpret"))
     from repro.kernels.grouped_matmul import grouped_swiglu_pallas
-    return grouped_swiglu_pallas(x, w_gate, w_up, w_down,
+    return grouped_swiglu_pallas(x, w_gate, w_up, w_down, counts,
                                  interpret=(m == "interpret"))
+
+
+# VMEM budget for the fused kernel's (T+1, D)-sized resident buffers: the
+# token table (input dtype) + the fp32 accumulator scratch + the fp32
+# output block, all live simultaneously (see gather_swiglu_scatter_pallas);
+# above this the unfused composition is used — same math, one materialized
+# intermediate.
+GSS_VMEM_BYTES = 8 * 1024 * 1024
+
+
+def gather_swiglu_scatter(x_ext, src_of_slot, w_slot, w_gate, w_up, w_down,
+                          counts=None, *, mode: str | None = None,
+                          zero_padded: bool = False):
+    """Fused EP hot path (gather -> expert SwiGLU -> weighted fp32
+    scatter-add); see kernels.grouped_matmul.gather_swiglu_scatter_pallas.
+    Returns (T, D) float32 where T = x_ext rows - 1.
+
+    ``zero_padded`` as in :func:`grouped_swiglu`: empty slots gather the
+    zero scratch row and carry zero weights, so the jnp ref skips the
+    occupancy mask."""
+    m = _mode(mode)
+    Tp1, D = x_ext.shape
+    resident = Tp1 * D * (x_ext.dtype.itemsize + 4 + 4)
+    if m != "ref" and resident <= GSS_VMEM_BYTES:
+        from repro.kernels.grouped_matmul import gather_swiglu_scatter_pallas
+        return gather_swiglu_scatter_pallas(
+            x_ext, src_of_slot, w_slot, w_gate, w_up, w_down, counts,
+            interpret=(m == "interpret"))
+    if m == "ref":
+        return _ref.gather_swiglu_scatter_ref(
+            x_ext, src_of_slot, w_slot, w_gate, w_up, w_down,
+            counts=None if zero_padded else counts)
+    # unfused fallback: same math through the occupancy-aware grouped kernel
+    import jax.numpy as jnp
+
+    E = w_gate.shape[0]
+    C = src_of_slot.shape[0] // E
+    buf = x_ext[src_of_slot].reshape(E, C, D)
+    y = grouped_swiglu(buf, w_gate, w_up, w_down, counts, mode=m)
+    w_f = jnp.asarray(w_slot, jnp.float32)
+    return jnp.zeros((Tp1, D), jnp.float32).at[src_of_slot].add(
+        y.reshape(E * C, D).astype(jnp.float32) * w_f[:, None])[:-1]
 
 
 def flash_attention(q, k, v, *, causal: bool = True, mode: str | None = None):

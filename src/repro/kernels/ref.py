@@ -12,17 +12,55 @@ import jax.numpy as jnp
 Array = jax.Array
 
 
-def grouped_matmul_ref(x: Array, w: Array) -> Array:
-    """Per-group matmul: x (G, M, K) @ w (G, K, N) -> (G, M, N)."""
+def occupancy_mask(counts, n_groups: int, width: int) -> Array:
+    """(G, N) bool occupancy mask; the bucket-layout math lives in the
+    shared plan layer (numpy/jnp dual-dialect) so the jnp refs and the
+    numpy substrate cannot drift."""
+    from repro.core.plan import occupancy_mask as _om
+    return _om(jnp.asarray(counts, jnp.int32), n_groups, width)
+
+
+def grouped_matmul_ref(x: Array, w: Array, counts: Array | None = None) -> Array:
+    """Per-group matmul: x (G, M, K) @ w (G, K, N) -> (G, M, N).
+    Rows >= counts[g] read as zero and produce zero output rows."""
+    if counts is not None:
+        x = jnp.where(occupancy_mask(counts, x.shape[0],
+                                     x.shape[1])[..., None], x, 0)
     return jnp.einsum("gmk,gkn->gmn", x, w.astype(x.dtype))
 
 
-def grouped_swiglu_ref(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
-    """Grouped expert SwiGLU: x (E, C, D); w_* (E, D, F)/(E, F, D)."""
+def grouped_swiglu_ref(x: Array, w_gate: Array, w_up: Array, w_down: Array,
+                       counts: Array | None = None) -> Array:
+    """Grouped expert SwiGLU: x (E, C, D); w_* (E, D, F)/(E, F, D).
+    With counts, rows beyond each bucket's occupancy are zero in and out
+    (swiglu(0) == 0, so masking the input suffices)."""
     dt = x.dtype
+    if counts is not None:
+        x = jnp.where(occupancy_mask(counts, x.shape[0],
+                                     x.shape[1])[..., None], x, 0)
     g = jnp.einsum("ecd,edf->ecf", x, w_gate.astype(dt))
     u = jnp.einsum("ecd,edf->ecf", x, w_up.astype(dt))
     return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, w_down.astype(dt))
+
+
+def gather_swiglu_scatter_ref(x_ext: Array, src_of_slot: Array, w_slot: Array,
+                              w_gate: Array, w_up: Array, w_down: Array,
+                              counts: Array | None = None) -> Array:
+    """Oracle for the fused EP hot path (gather -> expert SwiGLU -> weighted
+    fp32 scatter-add).  x_ext: (T+1, D) with zero scratch row T;
+    src_of_slot/w_slot: (E*C,); returns (T, D) float32 partial sums."""
+    E = w_gate.shape[0]
+    Tp1, D = x_ext.shape
+    C = src_of_slot.shape[0] // E
+    buf = x_ext[src_of_slot].reshape(E, C, D)
+    y = grouped_swiglu_ref(buf, w_gate, w_up, w_down, counts=counts)
+    keep = (occupancy_mask(counts, E, C).reshape(-1) if counts is not None
+            else jnp.ones((E * C,), bool))
+    tgt = jnp.where(keep, src_of_slot, Tp1 - 1)
+    out = jnp.zeros((Tp1, D), jnp.float32).at[tgt].add(
+        y.reshape(E * C, D).astype(jnp.float32)
+        * jnp.where(keep, w_slot.astype(jnp.float32), 0.0)[:, None])
+    return out[:-1]
 
 
 def flash_attention_ref(q: Array, k: Array, v: Array, causal: bool = True) -> Array:

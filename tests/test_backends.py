@@ -84,6 +84,48 @@ def test_backends_match_oracle_and_each_other(mode, net, seed, e, k, t):
                                atol=3e-5)
 
 
+@pytest.mark.parametrize("mode", ["ll", "ht"])
+def test_backends_occupancy_contract_equivalence(mode):
+    """ISSUE 3 acceptance: with the occupancy-carrying expert_fn contract
+    (counts flowing into the kernels), both backends still match the dense
+    oracle and each other."""
+    from repro.core.transport.simulator import NetConfig
+
+    x, ti, tw, wg, wu, wd = _problem(5, 8, 2, 32)
+
+    def jfn(b, counts=None):
+        return grouped_swiglu_ref(b, wg, wu, wd, counts=counts)
+
+    spec = EPSpec(axes=("model",), sizes=(1,), n_experts=8, top_k=2,
+                  capacity_factor=8.0, dtype=jnp.float32, mode=mode)
+    jb = get_backend("jax_collectives")
+
+    def island(x, ti, tw):
+        return jb.dispatch_combine(spec, x, ti, tw, jfn).out
+
+    out_jax = jax.jit(jax.shard_map(
+        island, mesh=_mesh11(), in_specs=(P(),) * 3, out_specs=P(),
+        check_vma=False))(x, ti, tw)
+
+    wg_n, wu_n, wd_n = (np.asarray(w, np.float32) for w in (wg, wu, wd))
+    calls = []
+
+    def nfn(toks, counts=None):
+        calls.append(counts is not None)
+        return np_grouped_swiglu(toks, wg_n, wu_n, wd_n, counts=counts)
+
+    spec_sim = EPSpec(axes=("sim",), sizes=(4,), n_experts=8, top_k=2,
+                      mode=mode, chunks=2)
+    sb = get_backend("simulated_rdma", net_cfg=NetConfig(mode="srd", seed=5))
+    res_sim = sb.dispatch_combine(spec_sim, np.asarray(x), np.asarray(ti),
+                                  np.asarray(tw), nfn)
+    assert calls and all(calls)
+
+    ref = np.asarray(moe_ref(x, ti, tw, wg, wu, wd))
+    np.testing.assert_allclose(np.asarray(out_jax), ref, rtol=3e-4, atol=3e-5)
+    np.testing.assert_allclose(res_sim.out, ref, rtol=3e-4, atol=3e-5)
+
+
 def test_moe_apply_simulated_rdma_matches_default():
     """Backend selection through the config/moe seam: the simulated_rdma
     reference path reproduces the dense-oracle MoE layer output."""

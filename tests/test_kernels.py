@@ -8,7 +8,9 @@ import pytest
 from repro.kernels import ref as R
 from repro.kernels.combine_reduce import combine_reduce_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.grouped_matmul import (grouped_matmul_pallas,
+from repro.kernels.grouped_matmul import (gather_swiglu_scatter_pallas,
+                                          grouped_matmul_pallas,
+                                          grouped_swiglu_db_pallas,
                                           grouped_swiglu_pallas)
 from repro.kernels.mamba_scan import mamba_scan_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
@@ -69,6 +71,144 @@ def test_grouped_swiglu_fused(dtype, e, c, d, f, bm, bf):
         err_kernel = np.abs(np.asarray(got, np.float32) - oracle).mean()
         err_ref = np.abs(ref - oracle).mean()
         assert err_kernel <= err_ref * 1.5 + 1e-3, (err_kernel, err_ref)
+
+
+# ---------------- occupancy-aware + fused kernels (ISSUE 3) ---------------
+# Ragged coverage by construction: C not a multiple of bm, F not a multiple
+# of bf, an expert with 0 occupied rows, and a single-row expert — for both
+# the occupancy-aware and the legacy (counts=None) entry points.
+RAGGED = [
+    # e, c, d, f, bm, bf, counts
+    (4, 20, 16, 13, 8, 8, (5, 0, 20, 1)),          # ragged C and F
+    (3, 17, 8, 24, 16, 16, (17, 1, 0)),            # single block, 1-row expert
+    (2, 32, 16, 19, 8, 4, (0, 0)),                 # fully empty
+    (1, 128, 32, 48, 128, 48, (64,)),              # aligned, half occupancy
+]
+
+
+def _ragged_problem(e, c, d, f, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (e, c, d), jnp.float32)
+    wg = jax.random.normal(ks[1], (e, d, f)) * 0.2
+    wu = jax.random.normal(ks[2], (e, d, f)) * 0.2
+    wd = jax.random.normal(ks[3], (e, f, d)) * 0.2
+    return x, wg, wu, wd
+
+
+@pytest.mark.parametrize("variant", ["pipelined", "double_buffered"])
+@pytest.mark.parametrize("e,c,d,f,bm,bf,counts", RAGGED)
+def test_grouped_swiglu_occupancy_ragged(variant, e, c, d, f, bm, bf, counts):
+    x, wg, wu, wd = _ragged_problem(e, c, d, f, seed=e * 7 + c)
+    cnt = jnp.asarray(counts, jnp.int32)
+    kern = (grouped_swiglu_db_pallas if variant == "double_buffered"
+            else grouped_swiglu_pallas)
+    for cc in (cnt, None):        # occupancy-aware and legacy entry points
+        got = kern(x, wg, wu, wd, cc, bm=bm, bf=bf, interpret=True)
+        ref = R.grouped_swiglu_ref(x, wg, wu, wd, counts=cc)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-5)
+    # rows beyond occupancy are exact zeros (the masked-ref contract)
+    got = np.asarray(kern(x, wg, wu, wd, cnt, bm=bm, bf=bf, interpret=True))
+    for g in range(e):
+        assert (got[g, int(cnt[g]):] == 0.0).all()
+
+
+def test_grouped_swiglu_db_multiblock_partial_occupancy():
+    """The double-buffered DMA pipeline itself (bm | C, so no pipelined
+    fallback) with multi-block groups whose occupancy ends mid-block —
+    exercising the prefetch-stop condition and tail-row masking."""
+    e, c, d, f, bm = 2, 32, 16, 24, 8
+    x, wg, wu, wd = _ragged_problem(e, c, d, f, seed=11)
+    cnt = jnp.array([10, 25], jnp.int32)     # 0 < cnt % bm, several blocks
+    got = grouped_swiglu_db_pallas(x, wg, wu, wd, cnt, bm=bm, bf=8,
+                                   interpret=True)
+    ref = R.grouped_swiglu_ref(x, wg, wu, wd, counts=cnt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+    assert (np.asarray(got)[0, 10:] == 0.0).all()
+    assert (np.asarray(got)[1, 25:] == 0.0).all()
+
+
+def test_grouped_swiglu_bucketed_counts():
+    """(E, B) sub-bucket counts — the post-a2a LL receive layout where each
+    source shard contributes its own occupied-prefix capacity bucket."""
+    e, c, d, f = 4, 24, 16, 13
+    x, wg, wu, wd = _ragged_problem(e, c, d, f, seed=3)
+    cnt = jnp.array([[3, 5], [0, 0], [12, 2], [1, 0]], jnp.int32)
+    got = grouped_swiglu_pallas(x, wg, wu, wd, cnt, bm=4, bf=8,
+                                interpret=True)
+    ref = R.grouped_swiglu_ref(x, wg, wu, wd, counts=cnt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("g,m,k,n,bm,bk,counts", [
+    (3, 20, 13, 16, 8, 8, (7, 0, 20)),             # ragged M and K
+    (2, 128, 128, 64, 128, 64, (1, 100)),          # aligned, 1-row group
+])
+def test_grouped_matmul_occupancy_ragged(g, m, k, n, bm, bk, counts):
+    ks = jax.random.split(jax.random.PRNGKey(m + k), 2)
+    x = jax.random.normal(ks[0], (g, m, k), jnp.float32)
+    w = jax.random.normal(ks[1], (g, k, n), jnp.float32)
+    cnt = jnp.asarray(counts, jnp.int32)
+    for cc in (cnt, None):
+        got = grouped_matmul_pallas(x, w, cc, bm=bm, bn=64, bk=bk,
+                                    interpret=True)
+        ref = R.grouped_matmul_ref(x, w, counts=cc)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def _slot_problem(e, c, t, counts, seed=0):
+    """Random src_of_slot/w_slot tables with occupied-prefix buckets."""
+    rng = np.random.default_rng(seed)
+    src = np.full((e * c,), t, np.int32)
+    wsl = np.zeros((e * c,), np.float32)
+    for g in range(e):
+        for r in range(int(counts[g])):
+            src[g * c + r] = rng.integers(0, t)
+            wsl[g * c + r] = rng.random() + 0.1
+    return jnp.asarray(src), jnp.asarray(wsl)
+
+
+@pytest.mark.parametrize("e,c,d,f,bm,bf,counts", RAGGED)
+def test_gather_swiglu_scatter_fused(e, c, d, f, bm, bf, counts):
+    """The fused gather->SwiGLU->scatter kernel == its jnp oracle on ragged
+    shapes, for both the occupancy-aware and legacy entry points."""
+    t = 11
+    _, wg, wu, wd = _ragged_problem(e, c, d, f, seed=e + c)
+    xt = jax.random.normal(jax.random.PRNGKey(5), (t, d), jnp.float32)
+    x_ext = jnp.concatenate([xt, jnp.zeros((1, d))], 0)
+    cnt = jnp.asarray(counts, jnp.int32)
+    src, wsl = _slot_problem(e, c, t, counts, seed=c)
+    for cc in (cnt, None):
+        got = gather_swiglu_scatter_pallas(x_ext, src, wsl, wg, wu, wd, cc,
+                                           bm=bm, bf=bf, interpret=True)
+        ref = R.gather_swiglu_scatter_ref(x_ext, src, wsl, wg, wu, wd,
+                                          counts=cc)
+        assert got.shape == (t, d) and got.dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_gather_swiglu_scatter_duplicate_tokens():
+    """A token appearing in several slots (top-k routing) accumulates every
+    weighted contribution — the scatter-add must not last-write-win."""
+    e, c, d, f, t = 2, 8, 16, 24, 3
+    _, wg, wu, wd = _ragged_problem(e, c, d, f, seed=1)
+    xt = jax.random.normal(jax.random.PRNGKey(2), (t, d), jnp.float32)
+    x_ext = jnp.concatenate([xt, jnp.zeros((1, d))], 0)
+    # token 0 hits both experts twice each
+    src = jnp.asarray(np.array([0, 0, 1] + [t] * 5 + [0, 0, 2] + [t] * 5,
+                               np.int32))
+    wsl = jnp.asarray(np.array([.5, .25, 1.] + [0.] * 5) .tolist() * 2,
+                      dtype=jnp.float32)
+    cnt = jnp.array([3, 3], jnp.int32)
+    got = gather_swiglu_scatter_pallas(x_ext, src, wsl, wg, wu, wd, cnt,
+                                       bm=4, bf=8, interpret=True)
+    ref = R.gather_swiglu_scatter_ref(x_ext, src, wsl, wg, wu, wd, counts=cnt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
