@@ -54,18 +54,19 @@ def gen_seed(top_idx: np.ndarray, capacity: int, n_channels: int = 8):
                 out.append(TransferCmd(
                     op=Op.WRITE, dst_rank=dst, channel=ch,
                     src_off=send0 + t * tb, dst_off=dst_off,
-                    length=tb, value=el).pack())
+                    length=tb).pack())
         for e in range(E):
             c = counts.get((r, e), 0)
             if not c:
                 continue
             dst, el = e // eps, e % eps
-            # fence descriptor: src_off carries the full 32-bit write count
-            # (the seed's 6-bit truncation is fixed; see ISSUE 2)
+            # fence descriptor: src_off carries the full 32-bit write count;
+            # dst_off the wide guard id (receivers key guards by registered
+            # address ranges — no expert slot in `value`; see ISSUE 4)
             out.append(TransferCmd(
                 op=Op.ATOMIC, dst_rank=dst, channel=e % n_channels,
                 src_off=c, dst_off=r * eps + el, length=0,
-                value=el, flags=FLAG_FENCE).pack())
+                flags=FLAG_FENCE).pack())
     return np.stack(out)
 
 

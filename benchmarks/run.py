@@ -35,6 +35,20 @@ DEVICE_BENCHES = [
 # micro tolerates ~2x, a 300ms mesh benchmark only +100us on top of 1.25x.
 REGRESSION_RATIO = 1.25
 REGRESSION_SLACK_US = 100.0
+# Real-thread wall-clock benches (sleep-polling proxy workers contending
+# for the host's cores) flap well beyond 25% between back-to-back runs of
+# IDENTICAL code — measured 103-171ms for the same threads=1 config on one
+# idle 2-core host.  Gating them at 1.25x makes the gate cry wolf, which
+# teaches people to ignore it; they get a 2x ratio instead (still catches
+# a real O(n) blowup), everything else keeps the tight gate.
+WALL_CLOCK_NOISY = ("fig17_proxy_threads/",)
+NOISY_RATIO = 2.0
+
+
+def _ratio_for(name: str) -> float:
+    if name.startswith(WALL_CLOCK_NOISY):
+        return NOISY_RATIO
+    return REGRESSION_RATIO
 
 
 def _slack_us(old: float) -> float:
@@ -55,7 +69,7 @@ def compare_results(results: dict, baseline: dict) -> list[str]:
                    for v in (new, old)):
             continue
         n_compared += 1
-        if new > old * REGRESSION_RATIO + _slack_us(old):
+        if new > old * _ratio_for(name) + _slack_us(old):
             bad.append(f"{name}: {old:.1f}us -> {new:.1f}us "
                        f"({new / old:.2f}x)")
     if not n_compared:

@@ -11,7 +11,15 @@ cd "$(dirname "$0")/.."
 python -m pip install -e '.[dev]' 2>/dev/null \
     || echo "ci.sh: pip install skipped (offline env); running with baked-in deps"
 
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+# Tier-1 suite (includes the transport-semantics conformance fuzz harness,
+# tests/test_transport_fuzz.py).  The default run is bounded: the slowest
+# arch/kernel sweeps sit behind `-m slow` (pyproject addopts deselects
+# them; run `scripts/ci.sh -m ''` for the full matrix), every test carries
+# a wall-clock timeout (conftest, REPRO_TEST_TIMEOUT_S) so a hung transport
+# quiesce fails fast, and --durations keeps the slowest-test list visible
+# so the bound doesn't silently erode.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+    --durations=20 "$@"
 
 # Bounded interpret-mode step: execute the Pallas kernel bodies (not just
 # the jnp refs) through the ops-level mode dispatch on every run.

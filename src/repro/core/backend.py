@@ -106,10 +106,15 @@ class SimulatedRDMABackend:
     name = "simulated_rdma"
     jit_compatible = False
 
-    def __init__(self, net_cfg=None, n_channels: int = 8):
+    def __init__(self, net_cfg=None, n_channels: int = 8,
+                 use_threads: bool = False, n_threads: int = 4):
         from repro.core.transport.simulator import NetConfig
         self.net_cfg = net_cfg or NetConfig(mode="srd", seed=0)
         self.n_channels = n_channels
+        # threaded proxies exercise the concurrent FIFO/quiesce path (the
+        # semantics conformance fuzz drives both); inline is deterministic
+        self.use_threads = use_threads
+        self.n_threads = n_threads
         self.last_world = None      # exposed for stats/introspection
 
     def dispatch_combine(self, spec, x, top_idx, top_w, expert_fn):
@@ -131,7 +136,9 @@ class SimulatedRDMABackend:
 
         world = EPWorld(n_ranks=R, n_experts=spec.n_experts, top_k=K, d=D,
                         capacity=Tl * K, net_cfg=self.net_cfg,
-                        n_channels=self.n_channels)
+                        n_channels=self.n_channels,
+                        use_threads=self.use_threads,
+                        n_threads=self.n_threads)
         xs = x.reshape(R, Tl, D)
         tis = top_idx.reshape(R, Tl, K)
         tws = top_w.reshape(R, Tl, K)

@@ -21,7 +21,7 @@ routing logic.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Optional
 
 import numpy as np
 
@@ -119,6 +119,27 @@ def effective_chunks(T: int, chunks: int) -> int:
     while T % chunks:
         chunks -= 1
     return chunks
+
+
+def receive_bucket_table(n_buckets: int, base: int, stride: int,
+                         extent: Optional[int] = None,
+                         ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Receive-bucket registration table: ``(bases, extents, guard_ids)``.
+
+    Bucket ``g`` occupies bytes ``[base + g*stride, base + g*stride +
+    extent)`` and owns guard id ``g`` — the table the EP executor registers
+    with each rank's proxy so the receiver can resolve a write's landing
+    offset to its completion-fence guard (DESIGN.md §12).  ``extent``
+    defaults to ``stride`` (densely packed buckets).  Guard ids double as
+    host counter indices, so the fence descriptor's ``dst_off`` addresses
+    both with one wide id.
+    """
+    ext = stride if extent is None else extent
+    assert 0 < ext <= stride, (extent, stride)
+    gids = np.arange(n_buckets, dtype=np.int64)
+    bases = base + gids * stride
+    extents = np.full(n_buckets, ext, np.int64)
+    return bases, extents, gids
 
 
 # ------------------------------------------------------- slot assignment --

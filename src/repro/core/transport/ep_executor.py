@@ -42,7 +42,7 @@ import numpy as np
 from repro.core import plan as planlib
 from repro.core.transport.fifo import FLAG_FENCE, Op, pack_cmds
 from repro.core.transport.proxy import Proxy, SymmetricMemory
-from repro.core.transport.semantics import IMM_VAL_MAX, UNFENCED_SLOT
+from repro.core.transport.semantics import IMM_VAL_MAX
 from repro.core.transport.simulator import Network, NetConfig
 
 F32 = np.dtype(np.float32)
@@ -68,6 +68,7 @@ class CommandStreams(NamedTuple):
     combine_pusher: np.ndarray
     combine_channel: np.ndarray
     entry_expert: np.ndarray    # global expert id per kept entry
+    guard_table: tuple          # (bases, extents, guard_ids) receive buckets
 
 
 def build_command_streams(top_idx: np.ndarray, n_experts: int, eps: int,
@@ -81,9 +82,14 @@ def build_command_streams(top_idx: np.ndarray, n_experts: int, eps: int,
     times this function against the seed's Python loops.
 
     Fence commands carry their full required write count in the 32-bit
-    ``src_off`` operand field (the immediate codec packs 21 bits), so
-    buckets larger than 63 tokens fence correctly — the seed truncated the
-    count to 6 bits.
+    ``src_off`` operand field (the immediate codec packs 21 bits) and
+    address their guard — the (src, expert) receive bucket — by the wide id
+    in ``dst_off``.  Receivers attribute dispatch writes to guards by
+    resolving each landing offset against the registered bucket table
+    (``guard_table``, which :meth:`EPWorld.run` registers with every proxy),
+    so no expert slot rides the wire and nothing aliases past 63 experts
+    per rank.  Combine writes land in the unregistered return region and
+    therefore can never satisfy a dispatch fence.
     """
     ti = np.ascontiguousarray(top_idx, np.int64)
     R, Tl, K = ti.shape
@@ -106,19 +112,21 @@ def build_command_streams(top_idx: np.ndarray, n_experts: int, eps: int,
     src_rank = np.broadcast_to(np.arange(R)[:, None, None], ti.shape)
 
     writes = pack_cmds(int(Op.WRITE), dst, ch, src_off, recv_off, tb,
-                       el)[valid]
-    # combine writes use the reserved unfenced slot: they share the source's
-    # per-peer ControlBuffer with that peer's own dispatch writes, and must
-    # never count toward a dispatch fence guard (the pipelined executor has
-    # combines in flight while other buckets' dispatches still are)
+                       0)[valid]
+    # combine writes need no special marking: they land in the return
+    # region, which is simply not in the registered bucket table, so they
+    # can never count toward a dispatch fence guard (the pipelined executor
+    # has combines in flight while other buckets' dispatches still are)
     combines = pack_cmds(int(Op.WRITE), src_rank, ch, recv_off, ret_off, tb,
-                         UNFENCED_SLOT)[valid]
+                         0)[valid]
     ch_flat = ch.reshape(-1)[valid]
 
+    # fence for (src r, expert e): guard id == counter id == r*eps + el,
+    # the index of the (r, el) receive bucket in the registered table
     r_f, e_f = np.nonzero(wp.counts > 0)
     el_f = e_f % eps
     fences = pack_cmds(int(Op.ATOMIC), e_f // eps, e_f % n_channels,
-                       wp.counts[r_f, e_f], r_f * eps + el_f, 0, el_f,
+                       wp.counts[r_f, e_f], r_f * eps + el_f, 0, 0,
                        FLAG_FENCE)
 
     return CommandStreams(
@@ -128,7 +136,9 @@ def build_command_streams(top_idx: np.ndarray, n_experts: int, eps: int,
         fences=fences, fence_pusher=r_f, fence_channel=e_f % n_channels,
         combines=combines, combine_pusher=dst.reshape(-1)[valid],
         combine_channel=ch_flat,
-        entry_expert=ti.reshape(-1)[valid])
+        entry_expert=ti.reshape(-1)[valid],
+        guard_table=planlib.receive_bucket_table(
+            ti.shape[0] * eps, recv0, capacity * tb))
 
 
 def np_swiglu(x: np.ndarray, wg, wu, wd) -> np.ndarray:
@@ -181,10 +191,9 @@ class EPWorld:
 
     def __post_init__(self):
         assert self.n_experts % self.n_ranks == 0
+        # no experts-per-rank ceiling: guards are keyed by registered
+        # address ranges, not a 6-bit wire slot (DESIGN.md §12)
         self.eps = self.n_experts // self.n_ranks
-        # 6-bit slot field, minus the reserved unfenced (combine) slot
-        assert self.eps < UNFENCED_SLOT + 1, \
-            "imm codec carries 6-bit expert slots (63 usable)"
         self.tok_bytes = self.d * 4
         self.net = Network(self.net_cfg, self.n_ranks,
                            threadsafe=self.use_threads)
@@ -278,6 +287,13 @@ class EPWorld:
                                    send0, recv0, ret0)
         wp = cs.plan
         assert int(wp.counts.max()) <= C, "capacity overflow in setup"
+
+        # register every rank's receive-bucket table with its proxy (the
+        # RDMA MR model): dispatch writes resolve to their bucket's guard on
+        # delivery; the return region [ret0, total) stays unregistered, so
+        # combine writes can never satisfy a dispatch fence
+        for p in proxies:
+            p.register_table(*cs.guard_table)
 
         self._reset_timeline()
         self._watch_dispatch(recv0, ret0)
@@ -418,7 +434,7 @@ class EPWorld:
         # the largest divisor of Tl (recorded in the timeline) instead of
         # silently dropping the pipeline to one chunk
         n_chunks = planlib.effective_chunks(Tl, n_chunks)
-        # chunk ids ride the 10-bit SEQ_ATOMIC operand field
+        # chunk ids ride the 16-bit SEQ_ATOMIC operand field
         assert n_chunks <= IMM_VAL_MAX + 1, \
             f"n_chunks {n_chunks} exceeds the {IMM_VAL_MAX + 1} chunk ids " \
             "the immediate codec can carry"
@@ -492,9 +508,12 @@ class EPWorld:
                                          wg, wu, wd)
             comb = mems[g].data[comb0:ret0].reshape(R * C, tb)
             comb[r * C + sl] = part.astype(np.float32).view(np.uint8)
+            # return writes land in [ret0, total): unregistered memory, so
+            # they satisfy no guard (HT needs none — chunk markers are
+            # SEQ_ATOMICs ordered behind the chunk's writes per channel)
             writes = pack_cmds(int(Op.WRITE), r, r % nc,
                                comb0 + (r * C + sl) * tb,
-                               ret0 + (g * C + sl) * tb, tb, UNFENCED_SLOT)
+                               ret0 + (g * C + sl) * tb, tb, 0)
             self._push_words(g, r % nc, writes)
 
         # ---- chunked dispatch: writes, then the chunk's markers ----------

@@ -13,8 +13,8 @@ until the cache goes stale — the paper's tail/head-placement optimisation.
 """
 from __future__ import annotations
 
-import struct
 import threading
+import time
 from dataclasses import dataclass
 from enum import IntEnum
 from typing import Optional
@@ -26,7 +26,7 @@ class Op(IntEnum):
     WRITE = 1          # one-sided RDMA write
     ATOMIC = 2         # standalone atomic (emulated via immediate data);
     #                    src_off carries the 32-bit operand (fence count /
-    #                    chunk id), value carries the guard slot
+    #                    chunk id), dst_off the wide guard/counter id
     DRAIN = 3          # drain CQ up to idx (scheduling hint)
     BARRIER = 4        # reserved opcode (no receiver-side state; the event
     #                    clock quiesce replaced the barrier round-trip)
@@ -46,7 +46,8 @@ class TransferCmd:
     src_off: int        # 32 bits (symmetric-memory offset)
     dst_off: int        # 32 bits
     length: int         # 20 bits (bytes)
-    value: int          # 12 bits (atomic increment / expert idx / barrier tag)
+    value: int = 0      # 12 bits (free tag; transport semantics ride
+    #                     src_off/dst_off — no expert slot on the wire)
     flags: int = 0      # 8 bits (FLAG_FENCE, ...)
 
     def pack(self) -> np.ndarray:
@@ -157,39 +158,43 @@ class FifoChannel:
             self._not_empty.notify()
         return m
 
-    def push_batch(self, words: np.ndarray, timeout: float = 10.0) -> int:
-        """Blocking bulk push: waits for ring space until every row of
-        ``words`` is queued.  Returns the number of rows pushed (== N)."""
-        done = 0
-        while done < len(words):
-            done += self.try_push_batch(words[done:])
-            if done < len(words):
-                with self._not_full:
-                    ok = self._not_full.wait_for(
-                        lambda: self._tail - self._head < self.capacity
-                        or self.closed, timeout)
-                    if not ok:
-                        raise TimeoutError("FIFO full: consumer stalled")
-                    if self.closed:
-                        raise RuntimeError("channel closed")
-                    self._cached_head = self._head
-        return done
-
-    def push(self, cmd: TransferCmd, timeout: float = 10.0) -> int:
-        """Blocking push: waits for space (the paper's sender pacing)."""
-        idx = self.try_push(cmd)
-        if idx is not None:
-            return idx
+    def _wait_for_space(self, deadline: float) -> None:
+        """Block until the ring has space or the absolute ``deadline``
+        (time.monotonic seconds) passes.  One deadline covers a whole
+        blocking push: a consumer that drains just slowly enough to keep
+        waking the producer must NOT keep extending the timeout."""
         with self._not_full:
-            ok = self._not_full.wait_for(
+            remaining = deadline - time.monotonic()
+            ok = remaining > 0 and self._not_full.wait_for(
                 lambda: self._tail - self._head < self.capacity or self.closed,
-                timeout)
+                remaining)
             if not ok:
                 raise TimeoutError("FIFO full: consumer stalled")
             if self.closed:
                 raise RuntimeError("channel closed")
             self._cached_head = self._head
-        return self.push(cmd, timeout)
+
+    def push_batch(self, words: np.ndarray, timeout: float = 10.0) -> int:
+        """Blocking bulk push: waits for ring space until every row of
+        ``words`` is queued, under ONE absolute deadline for the whole
+        batch.  Returns the number of rows pushed (== N)."""
+        deadline = time.monotonic() + timeout
+        done = 0
+        while done < len(words):
+            done += self.try_push_batch(words[done:])
+            if done < len(words):
+                self._wait_for_space(deadline)
+        return done
+
+    def push(self, cmd: TransferCmd, timeout: float = 10.0) -> int:
+        """Blocking push: waits for space (the paper's sender pacing) under
+        one absolute deadline — an iterative retry loop, not recursion."""
+        deadline = time.monotonic() + timeout
+        while True:
+            idx = self.try_push(cmd)
+            if idx is not None:
+                return idx
+            self._wait_for_space(deadline)
 
     def check_completion(self, idx: int) -> bool:
         """Has the command at ``idx`` been popped by the CPU side?"""

@@ -11,8 +11,18 @@ Atomics are emulated EFA-style (§4.1): a zero-byte write carrying the value
 in immediate data; the receiver proxy updates host-memory counters when the
 guard in the ControlBuffer passes.  For ``Op.ATOMIC`` commands the 32-bit
 ``src_off`` descriptor field (unused by a zero-byte transfer) carries the
-atomic operand — fence write-counts and HT chunk ids — and ``value`` carries
-the guard slot, so counts are no longer squeezed into 6 bits.
+atomic operand — fence write-counts and HT chunk ids — and ``dst_off``
+addresses the guard/counter by a wide 32-bit id.
+
+Completion-fence guards are keyed by **registered address ranges**
+(DESIGN.md §12): at world setup the EP executor registers each rank's
+receive-bucket table with its proxy (:meth:`Proxy.register_region` /
+:meth:`Proxy.register_table`), and a delivered write is attributed to a
+guard by resolving its landing offset against that table — exactly how a
+real RDMA write resolves against a registered MR.  The wire immediate
+carries no expert slot, so nothing aliases when a rank hosts more than 63
+experts; writes into unregistered memory (combine returns) satisfy no
+guard by construction.
 
 When a guarded atomic *applies* (its fence passes / its sequence prefix
 closes) the receiving proxy fires ``on_ready(src, counter_idx, operand)``:
@@ -31,8 +41,8 @@ import numpy as np
 from repro.core.transport.fifo import FLAG_FENCE, FifoChannel, Op, TransferCmd
 from repro.core.transport.semantics import (FENCE_COUNT_MAX, IMM_VAL_MAX,
                                             N_CHANNELS_MAX, SEQ_MOD,
-                                            ControlBuffer, ImmKind, pack_imm,
-                                            unpack_imm)
+                                            ControlBuffer, GuardTable,
+                                            ImmKind, pack_imm, unpack_imm)
 from repro.core.transport.simulator import Message, Network
 
 
@@ -61,6 +71,10 @@ class Proxy:
         self.mem = mem
         self.n_threads = n_threads
         self.channels = [FifoChannel(k_max_inflight) for _ in range(n_channels)]
+        # registered receive-bucket table: landing offset -> guard id; one
+        # per rank (it describes this rank's symmetric memory), shared by
+        # every per-peer ControlBuffer
+        self.guards = GuardTable()
         self.ctrl: dict[int, ControlBuffer] = {}       # per source rank
         self.error: Optional[BaseException] = None     # first worker failure
         self._threads: list[threading.Thread] = []
@@ -72,6 +86,17 @@ class Proxy:
         # readiness hook: (src_rank, counter_idx, operand) per applied atomic
         self.on_ready: Optional[Callable[[int, int, int], None]] = None
         net.register(rank, self._on_deliver)
+
+    # ------------------------------------------------------ registration --
+    def register_region(self, base: int, extent: int, guard_id: int) -> None:
+        """Register one receive bucket: writes landing in
+        ``[base, base + extent)`` count toward fence guard ``guard_id``.
+        Done once at world setup, before any traffic (the RDMA MR model)."""
+        self.guards.register(base, extent, guard_id)
+
+    def register_table(self, bases, extents, guard_ids) -> None:
+        """Bulk form of :meth:`register_region`; arguments broadcast."""
+        self.guards.register_table(bases, extents, guard_ids)
 
     # --------------------------------------------------------- GPU side --
     def push(self, ch: int, cmd: TransferCmd, block: bool = True) -> Optional[int]:
@@ -169,7 +194,9 @@ class Proxy:
             self.stats["writes"] += 1
             payload = self.mem.data[cmd.src_off:cmd.src_off + cmd.length].copy()
             seq = self._next_seq(cmd.dst_rank, cmd.channel)
-            imm = pack_imm(ImmKind.WRITE, cmd.channel, seq, cmd.value & 0x3F, 0)
+            # the immediate carries no guard key: the receiver resolves the
+            # landing offset against its registered bucket table instead
+            imm = pack_imm(ImmKind.WRITE, cmd.channel, seq, 0)
             self.net.send(Message(self.rank, cmd.dst_rank, qp=cmd.channel,
                                   kind="write", dst_off=cmd.dst_off,
                                   payload=payload, imm=imm))
@@ -186,15 +213,16 @@ class Proxy:
 
     def _send_atomic(self, cmd: TransferCmd, fence: bool):
         self.stats["atomics"] += 1
-        slot = cmd.value & 0x3F
         operand = cmd.src_off               # 32-bit atomic operand field
         if fence:
             assert operand <= FENCE_COUNT_MAX, operand
-            imm = pack_imm(ImmKind.FENCE_ATOMIC, cmd.channel, 0, slot, operand)
+            imm = pack_imm(ImmKind.FENCE_ATOMIC, cmd.channel, 0, operand)
         else:
             assert operand <= IMM_VAL_MAX, operand
             seq = self._next_seq(cmd.dst_rank, cmd.channel)
-            imm = pack_imm(ImmKind.SEQ_ATOMIC, cmd.channel, seq, slot, operand)
+            imm = pack_imm(ImmKind.SEQ_ATOMIC, cmd.channel, seq, operand)
+        # dst_off addresses the guard/counter by wide id (zero-byte
+        # transfers have no landing address to resolve)
         self.net.send(Message(self.rank, cmd.dst_rank, qp=cmd.channel,
                               kind="imm", dst_off=cmd.dst_off, payload=None,
                               imm=imm))
@@ -202,7 +230,7 @@ class Proxy:
     # ---------------------------------------------------------- receiver --
     def _ctrl_for(self, src: int) -> ControlBuffer:
         if src not in self.ctrl:
-            self.ctrl[src] = ControlBuffer()
+            self.ctrl[src] = ControlBuffer(guards=self.guards)
         return self.ctrl[src]
 
     def _on_deliver(self, msg: Message):
@@ -210,17 +238,18 @@ class Proxy:
         if msg.kind == "write":
             # writes apply immediately under ordered AND unordered
             # transports (one-sided placements at distinct offsets are
-            # order-independent); only atomics need receiver-side guards
+            # order-independent); only atomics need receiver-side guards —
+            # the landing offset resolves to the guard the write feeds
             def apply(m=msg):
                 self.mem.data[m.dst_off:m.dst_off + m.payload.size] = m.payload
-            cb.on_write(msg.imm, apply)
+            cb.on_write(msg.imm, apply, msg.dst_off)
         else:
-            kind, ch, seq, slot, value = unpack_imm(msg.imm)
+            kind, ch, seq, value = unpack_imm(msg.imm)
 
             def apply(m=msg, v=value):
                 idx = m.dst_off % len(self.mem.counters)
                 self.mem.counters[idx] += 1
                 if self.on_ready is not None:
                     self.on_ready(m.src, idx, v)
-            cb.on_atomic(msg.imm, apply)
+            cb.on_atomic(msg.imm, apply, guard=msg.dst_off)
         self.stats["held_max"] = max(self.stats["held_max"], cb.n_held)

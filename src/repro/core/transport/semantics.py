@@ -1,5 +1,5 @@
-"""Delivery-semantics bridging (paper §3.3, §4.1): immediate-data codec and
-the receiver-side control buffer.
+"""Delivery-semantics bridging (paper §3.3, §4.1): immediate-data codec,
+registered guard ranges, and the receiver-side control buffer.
 
 Heterogeneous NICs differ in ordering: ConnectX RC delivers in order, AWS
 EFA SRD is reliable-but-unordered, and EFA lacks hardware atomics.  The
@@ -7,79 +7,142 @@ receiver CPU proxy therefore (a) tags every message with a 32-bit immediate,
 (b) applies *writes* immediately, and (c) holds *atomics* in a control
 buffer until their guard is satisfied:
 
-- LL completion fence: an atomic covering expert ``e`` with required count
-  ``X`` applies only once >= X writes for ``e`` have landed (any order).
+- LL completion fence: an atomic guarding receive bucket ``g`` with required
+  count ``X`` applies only once >= X writes have landed *inside bucket g's
+  registered address range* (any order).
 - HT partial ordering: an atomic with sequence ``s`` on channel ``c``
   applies only after all messages with smaller sequence on ``c`` applied —
   ordering is per-channel, never global.
 
-The 32-bit immediate layout is per-kind (DESIGN.md §10).  Sequence-carrying
+Guard state is keyed by **registered address ranges**, not by wire-carried
+slots: at world setup each rank registers its receive-bucket table
+(base offset, extent, guard id) with its proxy — mirroring how real RDMA
+resolves a landing address against a registered MR — and the receiver
+resolves each write's ``dst_off`` to a guard id on delivery
+(:class:`GuardTable`).  Writes outside any registered range (combine return
+regions, HT entry buckets) satisfy no fence, which is why no reserved
+"unfenced" wire slot exists anymore; and because guard ids are 32-bit
+memory-table indices rather than a 6-bit immediate field, there is no limit
+of 64 experts per rank (the seed aliased expert ``e`` onto guard ``e % 64``
+past that).
+
+The 32-bit immediate layout is per-kind (DESIGN.md §12).  Sequence-carrying
 kinds (WRITE, SEQ_ATOMIC, BARRIER) pack
 
-    kind(2) | channel(3) | seq(11) | slot(6) | value(10)
+    kind(2) | channel(3) | seq(11) | value(16)
 
 while FENCE_ATOMIC — which does not participate in sequence ordering and
 therefore needs no seq field — trades it for a wide count:
 
-    kind(2) | channel(3) | slot(6) | count(21)
+    kind(2) | channel(3) | count(21) | unused(6)
 
-so LL fence guards cover receive buckets of up to 2M tokens (the seed
-truncated counts to 6 bits, silently corrupting any bucket > 63).  Wire
-sequences are modulo ``SEQ_MOD``; the receiver unwraps them against the
-highest sequence seen per channel, which is safe while delivery displacement
-stays below ``SEQ_MOD // 4`` arrivals (the network model bounds its reorder
-window accordingly).
+so LL fence guards cover receive buckets of up to 2M tokens.  The fence's
+guard id rides the descriptor's 32-bit ``dst_off`` field (a zero-byte
+transfer has no landing address to resolve), and the SEQ_ATOMIC operand
+(HT chunk id) rides the 16-bit value field.  Wire sequences are modulo
+``SEQ_MOD``; the receiver unwraps them against the highest sequence seen per
+channel, which is safe while delivery displacement stays below
+``SEQ_MOD // 4`` arrivals (the network model bounds its reorder window
+accordingly).
 """
 from __future__ import annotations
 
 import heapq
+from bisect import bisect_left, bisect_right
 from dataclasses import dataclass, field
 from enum import IntEnum
 from typing import Callable, Optional
 
+import numpy as np
+
 
 class ImmKind(IntEnum):
     WRITE = 0          # data write notification
-    FENCE_ATOMIC = 1   # LL: apply after `value` writes for expert `slot`
+    FENCE_ATOMIC = 1   # LL: apply after `count` writes landed in the guarded
+    #                    address range (guard id rides the descriptor dst_off)
     SEQ_ATOMIC = 2     # HT: apply in per-channel sequence order
     BARRIER = 3        # reserved (applies immediately)
 
 
 N_CHANNELS_MAX = 8           # channel field: 3 bits
 SEQ_MOD = 2048               # seq field: 11 bits (wire sequences wrap)
-IMM_VAL_MAX = 1023           # value field: 10 bits (seq-carrying kinds)
+IMM_VAL_MAX = (1 << 16) - 1  # value field: 16 bits (seq-carrying kinds)
 FENCE_COUNT_MAX = (1 << 21) - 1   # fence count field: 21 bits
-# slot 63 is reserved for writes that must never satisfy a fence guard
-# (combine writes share the per-peer ControlBuffer with dispatch writes;
-# without a reserved slot an early combine write would inflate
-# writes_seen[el] and let expert el's completion fence pass before all of
-# its dispatch writes landed)
-UNFENCED_SLOT = 63
 
 
-def pack_imm(kind: ImmKind, channel: int, seq: int, slot: int, value: int) -> int:
+def pack_imm(kind: ImmKind, channel: int, seq: int, value: int) -> int:
     """32-bit immediate; layout is per-kind (see module docstring).  For
     FENCE_ATOMIC, ``seq`` must be 0 (fences carry no sequence number) and
-    ``value`` is the required write count (up to :data:`FENCE_COUNT_MAX`)."""
-    assert 0 <= channel < N_CHANNELS_MAX and 0 <= slot < 64, (channel, slot)
+    ``value`` is the required write count (up to :data:`FENCE_COUNT_MAX`);
+    the guard id travels in the descriptor, not the immediate."""
+    assert 0 <= channel < N_CHANNELS_MAX, channel
     if kind == ImmKind.FENCE_ATOMIC:
         assert seq == 0 and 0 <= value <= FENCE_COUNT_MAX, (seq, value)
-        return int(kind) | (channel << 2) | (slot << 5) | (value << 11)
+        return int(kind) | (channel << 2) | (value << 5)
     assert 0 <= seq < SEQ_MOD and 0 <= value <= IMM_VAL_MAX, (seq, value)
-    return (int(kind) | (channel << 2) | (seq << 5) | (slot << 16)
-            | (value << 22))
+    return int(kind) | (channel << 2) | (seq << 5) | (value << 16)
 
 
 _IMM_KINDS = (ImmKind.WRITE, ImmKind.FENCE_ATOMIC, ImmKind.SEQ_ATOMIC,
               ImmKind.BARRIER)   # tuple dispatch: Enum.__call__ is hot
 
 
-def unpack_imm(imm: int) -> tuple[ImmKind, int, int, int, int]:
+def unpack_imm(imm: int) -> tuple[ImmKind, int, int, int]:
     kind = _IMM_KINDS[imm & 0x3]
     if kind is ImmKind.FENCE_ATOMIC:
-        return (kind, (imm >> 2) & 0x7, 0, (imm >> 5) & 0x3F, imm >> 11)
-    return (kind, (imm >> 2) & 0x7, (imm >> 5) & 0x7FF, (imm >> 16) & 0x3F,
-            imm >> 22)
+        return (kind, (imm >> 2) & 0x7, 0, (imm >> 5) & 0x1FFFFF)
+    return (kind, (imm >> 2) & 0x7, (imm >> 5) & 0x7FF, imm >> 16)
+
+
+class GuardTable:
+    """Registered receive-bucket table for one rank's symmetric memory.
+
+    Mirrors how a real NIC resolves a landing address against registered
+    memory regions: each entry is a non-overlapping ``[base, base + extent)``
+    byte range owning a wide integer ``guard_id``.  :meth:`resolve` maps a
+    delivered write's destination offset to the guard of the bucket it fell
+    in, or ``None`` for unregistered memory (e.g. combine return regions) —
+    such writes apply but can never satisfy a completion fence.
+    """
+
+    __slots__ = ("_bases", "_ends", "_gids")
+
+    def __init__(self):
+        self._bases: list[int] = []
+        self._ends: list[int] = []
+        self._gids: list[int] = []
+
+    def __len__(self) -> int:
+        return len(self._bases)
+
+    def register(self, base: int, extent: int, guard_id: int) -> None:
+        """Register one bucket.  Ranges must not overlap (a landing address
+        must resolve to exactly one guard, as with real MRs)."""
+        base, extent = int(base), int(extent)
+        assert extent > 0, extent
+        i = bisect_left(self._bases, base)
+        assert (i == 0 or self._ends[i - 1] <= base) and \
+               (i == len(self._bases) or base + extent <= self._bases[i]), \
+            f"guard range [{base}, {base + extent}) overlaps a registered one"
+        self._bases.insert(i, base)
+        self._ends.insert(i, base + extent)
+        self._gids.insert(i, int(guard_id))
+
+    def register_table(self, bases, extents, guard_ids) -> None:
+        """Bulk registration of a bucket table; arguments broadcast."""
+        bases, extents, guard_ids = np.broadcast_arrays(
+            np.asarray(bases), np.asarray(extents), np.asarray(guard_ids))
+        for b, x, g in zip(bases.reshape(-1).tolist(),
+                           extents.reshape(-1).tolist(),
+                           guard_ids.reshape(-1).tolist()):
+            self.register(b, x, g)
+
+    def resolve(self, off: int) -> Optional[int]:
+        """Guard id of the registered range containing ``off``, else None."""
+        i = bisect_right(self._bases, off) - 1
+        if i >= 0 and off < self._ends[i]:
+            return self._gids[i]
+        return None
 
 
 @dataclass(order=True)
@@ -92,47 +155,62 @@ class _Held:
 class ControlBuffer:
     """Receiver-side guard state for one peer connection.
 
-    ``writes_seen[slot]`` counts landed writes per expert slot (LL fence);
-    ``next_seq[channel]`` tracks the next expected (unwrapped) sequence (HT
-    order).  Held atomics live in per-channel min-heaps keyed by sequence.
+    ``writes_seen[guard_id]`` counts landed writes per registered receive
+    bucket (LL fence) — writes are attributed to guards by resolving their
+    landing offset against the shared :class:`GuardTable`, never by a
+    wire-carried slot; ``next_seq[channel]`` tracks the next expected
+    (unwrapped) sequence (HT order).  Held seq atomics live in per-channel
+    min-heaps keyed by sequence; held fences live in per-guard lists.
     """
 
-    def __init__(self, n_slots: int = 64, n_channels: int = N_CHANNELS_MAX):
-        self.writes_seen = [0] * n_slots
+    def __init__(self, guards: Optional[GuardTable] = None,
+                 n_channels: int = N_CHANNELS_MAX):
+        self.guards = guards
+        self.writes_seen: dict[int, int] = {}
         self.next_seq = [0] * n_channels
         self._hi_seq = [0] * n_channels        # unwrap anchor per channel
         self._arrived: dict[int, list[int]] = {}   # per-channel seq min-heaps
         self.held_seq: dict[int, list[_Held]] = {}
-        self.held_fence: list[tuple[int, int, int, Callable]] = []
+        # guard id -> [(required count, imm, apply)]
+        self.held_fence: dict[int, list[tuple[int, int, Callable]]] = {}
         self.applied_log: list[int] = []     # imm values, in application order
         self._held = 0                       # incremental count (hot path)
         self.held_peak = 0
 
     # ------------------------------------------------------------ events --
-    def on_write(self, imm: int, apply: Callable[[], None]) -> None:
-        """A data write landed (RDMA writes apply immediately)."""
-        kind, ch, seq, slot, value = unpack_imm(imm)
+    def on_write(self, imm: int, apply: Callable[[], None],
+                 dst_off: int = 0) -> None:
+        """A data write landed at ``dst_off`` (RDMA writes apply
+        immediately); the landing offset resolves to the guard it feeds."""
+        kind, ch, seq, value = unpack_imm(imm)
         assert kind == ImmKind.WRITE
         apply()
-        self.writes_seen[slot] += 1
+        gid = self.guards.resolve(dst_off) if self.guards is not None else None
+        if gid is not None:
+            self.writes_seen[gid] = self.writes_seen.get(gid, 0) + 1
         self._bump_seq(ch, self._unwrap(ch, seq))
         self.applied_log.append(imm)
         if self._held:          # guard the (common) nothing-held fast path
+            if gid is not None:
+                self._drain_fences(gid)
             self._drain(ch)
-            self._drain_fences()
 
-    def on_atomic(self, imm: int, apply: Callable[[], None]) -> None:
-        kind, ch, seq, slot, value = unpack_imm(imm)
-        if kind == ImmKind.FENCE_ATOMIC:
-            if self.writes_seen[slot] >= value:
+    def on_atomic(self, imm: int, apply: Callable[[], None],
+                  guard: Optional[int] = None) -> None:
+        """An atomic-as-immediate landed.  For FENCE_ATOMIC, ``guard`` is
+        the wide guard id the descriptor's ``dst_off`` addressed."""
+        kind, ch, seq, value = unpack_imm(imm)
+        if kind is ImmKind.FENCE_ATOMIC:
+            if self.writes_seen.get(guard, 0) >= value:
                 apply()
                 self.applied_log.append(imm)
             else:
-                self.held_fence.append((slot, value, imm, apply))
+                self.held_fence.setdefault(guard, []).append(
+                    (value, imm, apply))
                 self._held += 1
                 if self._held > self.held_peak:
                     self.held_peak = self._held
-        elif kind == ImmKind.SEQ_ATOMIC:
+        elif kind is ImmKind.SEQ_ATOMIC:
             full = self._unwrap(ch, seq)
             if self.next_seq[ch] >= full:
                 apply()
@@ -181,20 +259,24 @@ class ControlBuffer:
             self._held -= 1
             self.applied_log.append(h.imm)
             self._bump_seq(ch, h.seq)
-        self._drain_fences()
 
-    def _drain_fences(self) -> None:
-        if not self.held_fence:
+    def _drain_fences(self, gid: int) -> None:
+        held = self.held_fence.get(gid)
+        if not held:
             return
+        seen = self.writes_seen.get(gid, 0)
         still = []
-        for slot, value, imm, apply in self.held_fence:
-            if self.writes_seen[slot] >= value:
+        for value, imm, apply in held:
+            if seen >= value:
                 apply()
                 self._held -= 1
                 self.applied_log.append(imm)
             else:
-                still.append((slot, value, imm, apply))
-        self.held_fence = still
+                still.append((value, imm, apply))
+        if still:
+            self.held_fence[gid] = still
+        else:
+            del self.held_fence[gid]
 
     @property
     def n_held(self) -> int:

@@ -130,10 +130,20 @@ class Network:
     # ------------------------------------------------------------ delivery --
     @property
     def pending(self) -> int:
-        return len(self._heap)
+        # worker threads send() (heap push) concurrently in threadsafe mode;
+        # readers must take the same lock (len() alone is atomic in CPython,
+        # but the quiesce loop pairs this with next_event_t and must not see
+        # a heap mid-mutation)
+        if self._lock is None:
+            return len(self._heap)
+        with self._lock:
+            return len(self._heap)
 
     def next_event_t(self) -> Optional[float]:
-        return self._heap[0][0] if self._heap else None
+        if self._lock is None:
+            return self._heap[0][0] if self._heap else None
+        with self._lock:
+            return self._heap[0][0] if self._heap else None
 
     def step(self) -> bool:
         """Deliver the earliest in-flight message (advances the clock).
@@ -169,8 +179,12 @@ class Network:
             self.step()
             n += 1
 
-    def flush(self, steps: Optional[int] = None):
+    def flush(self, steps: Optional[int] = None) -> int:
         """Deliver everything currently in flight (and anything scheduled by
-        the deliveries themselves), in timestamp order."""
-        while self.step():
-            pass
+        the deliveries themselves), in timestamp order.  ``steps`` bounds the
+        number of deliveries (None = drain completely); returns how many
+        messages were delivered."""
+        n = 0
+        while (steps is None or n < steps) and self.step():
+            n += 1
+        return n

@@ -1,6 +1,8 @@
 import os
+import signal
 import subprocess
 import sys
+import threading
 import types
 from pathlib import Path
 
@@ -47,6 +49,38 @@ except ImportError:
     _hyp.assume = lambda *a, **k: True
     sys.modules["hypothesis"] = _hyp
     sys.modules["hypothesis.strategies"] = _st
+
+# ---- per-test timeout ------------------------------------------------------
+# pytest-timeout is not available in hermetic containers, so the harness is
+# hand-rolled: every test gets a SIGALRM-based wall-clock budget (default
+# REPRO_TEST_TIMEOUT_S, override per test with @pytest.mark.timeout(N)) so a
+# hung transport quiesce or deadlocked FIFO fails fast with a stack instead
+# of wedging CI.  SIGALRM interrupts the main thread only — exactly where
+# pytest runs test bodies; proxy worker threads are daemons and die with it.
+_DEFAULT_TEST_TIMEOUT_S = float(os.environ.get("REPRO_TEST_TIMEOUT_S", "300"))
+
+
+@pytest.hookimpl(wrapper=True)
+def pytest_runtest_call(item):
+    marker = item.get_closest_marker("timeout")
+    limit = float(marker.args[0]) if marker and marker.args \
+        else _DEFAULT_TEST_TIMEOUT_S
+    if (limit <= 0 or not hasattr(signal, "SIGALRM")
+            or threading.current_thread() is not threading.main_thread()):
+        return (yield)
+
+    def on_alarm(signum, frame):
+        raise TimeoutError(
+            f"{item.nodeid} exceeded the {limit:.0f}s per-test timeout")
+
+    old = signal.signal(signal.SIGALRM, on_alarm)
+    signal.setitimer(signal.ITIMER_REAL, limit)
+    try:
+        return (yield)
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0)
+        signal.signal(signal.SIGALRM, old)
+
 
 # NOTE: no XLA_FLAGS here — smoke tests must see 1 device (assignment rule).
 # Multi-device tests run via run_distributed() subprocesses.

@@ -100,38 +100,38 @@ def test_fifo_push_batch_roundtrip_with_wraparound():
         assert cmd.src_off == i and cmd.dst_off == 2 * i
 
 
-# sequence-carrying kinds: kind(2) | channel(3) | seq(11) | slot(6) | value(10)
+# sequence-carrying kinds: kind(2) | channel(3) | seq(11) | value(16) —
+# no expert slot on the wire; fence guards are keyed by registered address
+# ranges at the receiver (DESIGN.md §12)
 @pytest.mark.parametrize("kind", [ImmKind.WRITE, ImmKind.SEQ_ATOMIC,
                                   ImmKind.BARRIER])
-@pytest.mark.parametrize("ch,seq,slot,val", [
-    (0, 0, 0, 0), (7, 2047, 63, 1023), (1, 1024, 32, 1), (7, 1, 0, 512),
+@pytest.mark.parametrize("ch,seq,val", [
+    (0, 0, 0), (7, 2047, (1 << 16) - 1), (1, 1024, 1), (7, 1, 512),
 ])
-def test_imm_codec_roundtrip_boundaries(kind, ch, seq, slot, val):
-    imm = pack_imm(kind, ch, seq, slot, val)
+def test_imm_codec_roundtrip_boundaries(kind, ch, seq, val):
+    imm = pack_imm(kind, ch, seq, val)
     assert 0 <= imm < 2 ** 32
-    assert unpack_imm(imm) == (kind, ch, seq, slot, val)
+    assert unpack_imm(imm) == (kind, ch, seq, val)
 
 
-# fences carry no sequence: kind(2) | channel(3) | slot(6) | count(21)
-@pytest.mark.parametrize("ch,slot,count", [
-    (0, 0, 0), (7, 63, (1 << 21) - 1), (3, 17, 64), (1, 1, 1 << 20),
+# fences carry no sequence: kind(2) | channel(3) | count(21) | unused(6)
+@pytest.mark.parametrize("ch,count", [
+    (0, 0), (7, (1 << 21) - 1), (3, 64), (1, 1 << 20),
 ])
-def test_imm_codec_fence_roundtrip_boundaries(ch, slot, count):
-    imm = pack_imm(ImmKind.FENCE_ATOMIC, ch, 0, slot, count)
+def test_imm_codec_fence_roundtrip_boundaries(ch, count):
+    imm = pack_imm(ImmKind.FENCE_ATOMIC, ch, 0, count)
     assert 0 <= imm < 2 ** 32
-    assert unpack_imm(imm) == (ImmKind.FENCE_ATOMIC, ch, 0, slot, count)
+    assert unpack_imm(imm) == (ImmKind.FENCE_ATOMIC, ch, 0, count)
 
 
 def test_imm_codec_rejects_out_of_range():
     with pytest.raises(AssertionError):
-        pack_imm(ImmKind.WRITE, 8, 0, 0, 0)       # channel > 3 bits
+        pack_imm(ImmKind.WRITE, 8, 0, 0)          # channel > 3 bits
     with pytest.raises(AssertionError):
-        pack_imm(ImmKind.WRITE, 0, 2048, 0, 0)    # seq > 11 bits
+        pack_imm(ImmKind.WRITE, 0, 2048, 0)       # seq > 11 bits
     with pytest.raises(AssertionError):
-        pack_imm(ImmKind.WRITE, 0, 0, 64, 0)      # slot > 6 bits
+        pack_imm(ImmKind.WRITE, 0, 0, 1 << 16)    # value > 16 bits
     with pytest.raises(AssertionError):
-        pack_imm(ImmKind.WRITE, 0, 0, 0, 1024)    # value > 10 bits
+        pack_imm(ImmKind.FENCE_ATOMIC, 0, 1, 0)         # fences carry no seq
     with pytest.raises(AssertionError):
-        pack_imm(ImmKind.FENCE_ATOMIC, 0, 1, 0, 0)       # fences carry no seq
-    with pytest.raises(AssertionError):
-        pack_imm(ImmKind.FENCE_ATOMIC, 0, 0, 0, 1 << 21)  # count > 21 bits
+        pack_imm(ImmKind.FENCE_ATOMIC, 0, 0, 1 << 21)   # count > 21 bits

@@ -25,12 +25,15 @@ def _tol(dt):
     return TOL[dt]
 
 
+# the largest interpret-mode shapes are slow-marked (bounded default run;
+# the full sweep runs under `pytest -m slow`) — one representative shape per
+# kernel always runs
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("g,m,k,n,bm,bn,bk", [
     (2, 128, 128, 128, 128, 128, 128),
-    (4, 256, 128, 256, 128, 128, 64),
-    (1, 128, 512, 128, 64, 128, 256),
-    (3, 384, 256, 128, 128, 128, 128),
+    pytest.param(4, 256, 128, 256, 128, 128, 64, marks=pytest.mark.slow),
+    pytest.param(1, 128, 512, 128, 64, 128, 256, marks=pytest.mark.slow),
+    pytest.param(3, 384, 256, 128, 128, 128, 128, marks=pytest.mark.slow),
 ])
 def test_grouped_matmul(dtype, g, m, k, n, bm, bn, bk):
     key = jax.random.PRNGKey(m * n)
@@ -45,8 +48,8 @@ def test_grouped_matmul(dtype, g, m, k, n, bm, bn, bk):
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("e,c,d,f,bm,bf", [
     (2, 128, 128, 256, 128, 128),
-    (4, 256, 128, 128, 128, 128),
-    (1, 128, 256, 384, 64, 128),
+    pytest.param(4, 256, 128, 128, 128, 128, marks=pytest.mark.slow),
+    pytest.param(1, 128, 256, 384, 64, 128, marks=pytest.mark.slow),
 ])
 def test_grouped_swiglu_fused(dtype, e, c, d, f, bm, bf):
     """The fused kernel accumulates in fp32; in bf16 it must be at least as
@@ -213,9 +216,11 @@ def test_gather_swiglu_scatter_duplicate_tokens():
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("b,s,h,hkv,d,bq,bk", [
-    (1, 256, 4, 4, 64, 128, 128),      # MHA
+    pytest.param(1, 256, 4, 4, 64, 128, 128,       # MHA
+                 marks=pytest.mark.slow),
     (2, 256, 4, 2, 64, 128, 64),       # GQA 2:1
-    (1, 512, 8, 2, 64, 256, 128),      # GQA 4:1
+    pytest.param(1, 512, 8, 2, 64, 256, 128,       # GQA 4:1
+                 marks=pytest.mark.slow),
     (1, 128, 2, 1, 128, 128, 128),     # MQA, single block
 ])
 def test_flash_attention_causal(dtype, b, s, h, hkv, d, bq, bk):
@@ -247,8 +252,8 @@ def test_flash_attention_noncausal():
 
 
 @pytest.mark.parametrize("bt,s,di,n,bd,chunk", [
-    (1, 128, 256, 16, 128, 64),
-    (2, 256, 128, 16, 128, 128),
+    pytest.param(1, 128, 256, 16, 128, 64, marks=pytest.mark.slow),
+    pytest.param(2, 256, 128, 16, 128, 128, marks=pytest.mark.slow),
     (1, 64, 512, 8, 256, 32),
 ])
 def test_mamba_scan(bt, s, di, n, bd, chunk):
@@ -310,7 +315,7 @@ def test_blocked_jnp_attention_matches_naive():
 
 @pytest.mark.parametrize("b,h,hkv,d,s,pos", [
     (2, 8, 2, 64, 256, 100),
-    (1, 4, 4, 128, 512, 511),
+    pytest.param(1, 4, 4, 128, 512, 511, marks=pytest.mark.slow),
     (2, 16, 8, 64, 256, 0),
 ])
 def test_decode_attention(b, h, hkv, d, s, pos):

@@ -12,8 +12,16 @@ from repro.configs import ARCH_IDS, get_config, reduced_config
 from repro.models import model_zoo as Z
 from repro.training.train_loop import HParams, init_state, train_step
 
+# bounded default run (ISSUE 4 satellite): every invocation covers one
+# attention, one MoE and one SSM family; the full arch matrix (~90 s of jit
+# compiles) runs under `pytest -m slow`.
+_DEFAULT_ARCHS = {"qwen3_1_7b", "moonshot_v1_16b_a3b", "falcon_mamba_7b"}
+_ARCH_PARAMS = [a if a in _DEFAULT_ARCHS
+                else pytest.param(a, marks=pytest.mark.slow)
+                for a in ARCH_IDS]
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+
+@pytest.mark.parametrize("arch", _ARCH_PARAMS)
 def test_forward_shapes_and_finite(arch):
     cfg = reduced_config(get_config(arch), n_layers=2, d_model=64, vocab=512)
     key = jax.random.PRNGKey(0)
@@ -29,7 +37,7 @@ def test_forward_shapes_and_finite(arch):
     assert bool(jnp.isfinite(h.astype(jnp.float32)).all()), f"{arch}: NaN/inf"
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", _ARCH_PARAMS)
 def test_one_train_step(arch):
     cfg = reduced_config(get_config(arch), n_layers=2, d_model=64, vocab=512)
     # warmup=1 so the first step uses the full lr (the param-change check
@@ -55,9 +63,11 @@ def test_one_train_step(arch):
     assert np.abs(d1 - d0).max() > 1e-6
 
 
-@pytest.mark.parametrize("arch", ["qwen3_1_7b", "falcon_mamba_7b",
-                                  "moonshot_v1_16b_a3b",
-                                  "jamba_1_5_large_398b"])
+@pytest.mark.parametrize("arch", [
+    "qwen3_1_7b", "falcon_mamba_7b",
+    pytest.param("moonshot_v1_16b_a3b", marks=pytest.mark.slow),
+    pytest.param("jamba_1_5_large_398b", marks=pytest.mark.slow),
+])
 def test_decode_matches_forward(arch):
     cfg = reduced_config(get_config(arch), n_layers=2, d_model=64, vocab=512)
     cfg = dataclasses.replace(cfg, dtype="float32", remat=False)

@@ -8,8 +8,9 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.transport import (EPWorld, FLAG_FENCE, ControlBuffer,
-                                  FifoChannel, ImmKind, NetConfig, Op,
-                                  TransferCmd, pack_imm, unpack_imm)
+                                  FifoChannel, GuardTable, ImmKind, Message,
+                                  NetConfig, Network, Op, TransferCmd,
+                                  pack_imm, unpack_imm)
 
 
 # ------------------------------------------------------------------ FIFO --
@@ -61,64 +62,135 @@ def test_fifo_cached_head_limits_pcie_reads():
     assert ch.pcie_reads <= 1
 
 
+def test_fifo_push_deadline_is_absolute():
+    """Blocking pushes against a stalled consumer fail at ONE absolute
+    deadline — the seed reset the 10 s timeout on every wait cycle (and
+    `push` recursed unboundedly), so a consumer draining one slot per
+    wake-up could extend the 'timeout' forever."""
+    import time as _time
+    from repro.core.transport.fifo import pack_cmds as _pack
+
+    ch = FifoChannel(k_max_inflight=2)
+    ch.push(TransferCmd(Op.WRITE, 0, 0, 0, 0, 16, 0))
+    ch.push(TransferCmd(Op.WRITE, 0, 0, 1, 0, 16, 0))
+
+    # a consumer that frees exactly one slot per wait cycle: each pop wakes
+    # the producer, which under per-cycle timeouts would never expire
+    stop = threading.Event()
+
+    def dribble():
+        while not stop.is_set():
+            _time.sleep(0.05)
+            ch.pop()
+
+    th = threading.Thread(target=dribble, daemon=True)
+    th.start()
+    try:
+        t0 = _time.monotonic()
+        with pytest.raises(TimeoutError):
+            # 10 rows can never fit within 0.25 s at ~1 slot / 50 ms
+            ch.push_batch(_pack(int(Op.WRITE), 0, 0, np.arange(10), 0, 16, 0),
+                          timeout=0.25)
+        elapsed = _time.monotonic() - t0
+        assert elapsed < 2.0, f"deadline extended: {elapsed:.2f}s"
+    finally:
+        stop.set()
+        th.join(timeout=2)
+
+    ch2 = FifoChannel(k_max_inflight=1)
+    ch2.push(TransferCmd(Op.WRITE, 0, 0, 0, 0, 16, 0))
+    t0 = _time.monotonic()
+    with pytest.raises(TimeoutError):
+        ch2.push(TransferCmd(Op.WRITE, 0, 0, 1, 0, 16, 0), timeout=0.1)
+    assert _time.monotonic() - t0 < 2.0
+
+
 # ------------------------------------------------------ immediate data ----
-@given(ch=st.integers(0, 7), seq=st.integers(0, 2047), slot=st.integers(0, 63),
-       val=st.integers(0, 1023),
+@given(ch=st.integers(0, 7), seq=st.integers(0, 2047),
+       val=st.integers(0, (1 << 16) - 1),
        kind=st.sampled_from([ImmKind.WRITE, ImmKind.SEQ_ATOMIC,
                              ImmKind.BARRIER]))
-def test_imm_codec_roundtrip(ch, seq, slot, val, kind):
-    imm = pack_imm(kind, ch, seq, slot, val)
+def test_imm_codec_roundtrip(ch, seq, val, kind):
+    imm = pack_imm(kind, ch, seq, val)
     assert 0 <= imm < 2 ** 32
-    assert unpack_imm(imm) == (kind, ch, seq, slot, val)
+    assert unpack_imm(imm) == (kind, ch, seq, val)
 
 
-@given(ch=st.integers(0, 7), slot=st.integers(0, 63),
-       count=st.integers(0, (1 << 21) - 1))
-def test_imm_codec_fence_wide_count(ch, slot, count):
+@given(ch=st.integers(0, 7), count=st.integers(0, (1 << 21) - 1))
+def test_imm_codec_fence_wide_count(ch, count):
     """Fences trade the (unused) seq field for a 21-bit write count — the
     seed's 6-bit field silently corrupted any bucket larger than 63."""
-    imm = pack_imm(ImmKind.FENCE_ATOMIC, ch, 0, slot, count)
+    imm = pack_imm(ImmKind.FENCE_ATOMIC, ch, 0, count)
     assert 0 <= imm < 2 ** 32
-    assert unpack_imm(imm) == (ImmKind.FENCE_ATOMIC, ch, 0, slot, count)
+    assert unpack_imm(imm) == (ImmKind.FENCE_ATOMIC, ch, 0, count)
+
+
+# ------------------------------------------------------- guard table ------
+def test_guard_table_resolves_ranges_and_rejects_overlap():
+    gt = GuardTable()
+    gt.register(100, 50, 7)
+    gt.register(0, 100, 3)
+    gt.register(1000, 8, 9)
+    assert gt.resolve(0) == 3 and gt.resolve(99) == 3
+    assert gt.resolve(100) == 7 and gt.resolve(149) == 7
+    assert gt.resolve(150) is None and gt.resolve(999) is None
+    assert gt.resolve(1000) == 9 and gt.resolve(1008) is None
+    with pytest.raises(AssertionError):
+        gt.register(140, 20, 11)          # overlaps [100, 150)
 
 
 # --------------------------------------------------- control buffer -------
-def _oracle_apply_order(events):
-    """In-order oracle: writes apply immediately; fence atomics wait for
-    their count; seq atomics wait for per-channel predecessor seqs."""
-    cb = ControlBuffer()
-    for kind, imm in events:
-        if kind == "w":
-            cb.on_write(imm, lambda: None)
-        else:
-            cb.on_atomic(imm, lambda: None)
-    return cb
+def _bucket_guards(n_buckets=8, bucket_bytes=64):
+    """One registered receive bucket per guard id (gid g covers
+    [g*bucket_bytes, (g+1)*bucket_bytes))."""
+    gt = GuardTable()
+    for g in range(n_buckets):
+        gt.register(g * bucket_bytes, bucket_bytes, g)
+    return gt
 
 
 @settings(max_examples=60, deadline=None)
 @given(data=st.data(), n_writes=st.integers(1, 20), seed=st.integers(0, 9999))
 def test_fence_atomic_never_applies_early(data, n_writes, seed):
     """LL fence: for ANY delivery permutation, the fence atomic applies
-    after >= X writes to its expert slot have applied."""
+    after >= X writes landed in its registered bucket range."""
     rng = np.random.default_rng(seed)
-    slot = 3
-    writes = [("w", pack_imm(ImmKind.WRITE, ch % 8, s, slot, 0))
+    gt = _bucket_guards()
+    gid, bucket = 3, 64
+    writes = [("w", pack_imm(ImmKind.WRITE, ch % 8, s, 0),
+               gid * bucket + (s * 4) % bucket)
               for s, ch in enumerate(range(n_writes))]
-    fence = ("a", pack_imm(ImmKind.FENCE_ATOMIC, 0, 0, slot, n_writes))
+    fence = ("a", pack_imm(ImmKind.FENCE_ATOMIC, 0, 0, n_writes), gid)
     events = writes + [fence]
     perm = rng.permutation(len(events))
-    cb = ControlBuffer()
+    cb = ControlBuffer(guards=gt)
     applied = []
     for i in perm:
-        kind, imm = events[i]
+        kind, imm, off = events[i]
         if kind == "w":
-            cb.on_write(imm, lambda: applied.append("w"))
+            cb.on_write(imm, lambda: applied.append("w"), off)
         else:
-            cb.on_atomic(imm, lambda: applied.append("A"))
+            cb.on_atomic(imm, lambda: applied.append("A"), guard=off)
     assert applied.count("w") == n_writes
     assert applied.count("A") == 1
     # the fence applied only after all n_writes writes
     assert applied.index("A") >= n_writes
+
+
+def test_fence_ignores_writes_outside_registered_ranges():
+    """A write landing in unregistered memory (e.g. the combine return
+    region) must never satisfy a fence guard."""
+    gt = _bucket_guards(n_buckets=2)
+    cb = ControlBuffer(guards=gt)
+    applied = []
+    # two writes into unregistered space, one into bucket 1
+    cb.on_write(pack_imm(ImmKind.WRITE, 0, 0, 0), lambda: None, 5000)
+    cb.on_write(pack_imm(ImmKind.WRITE, 0, 1, 0), lambda: None, 6000)
+    cb.on_atomic(pack_imm(ImmKind.FENCE_ATOMIC, 0, 0, 1),
+                 lambda: applied.append("A"), guard=1)
+    assert not applied and cb.n_held == 1
+    cb.on_write(pack_imm(ImmKind.WRITE, 0, 2, 0), lambda: None, 64)
+    assert applied == ["A"] and cb.n_held == 0
 
 
 @settings(max_examples=60, deadline=None)
@@ -132,7 +204,7 @@ def test_seq_atomics_apply_in_channel_order(seed, n):
         for s in range(n):
             kind = "w" if s % 2 == 0 else "a"
             ik = ImmKind.WRITE if kind == "w" else ImmKind.SEQ_ATOMIC
-            events.append((kind, ch, s, pack_imm(ik, ch, s, 0, 0)))
+            events.append((kind, ch, s, pack_imm(ik, ch, s, 0)))
     perm = rng.permutation(len(events))
     cb = ControlBuffer()
     applied = []
@@ -223,12 +295,13 @@ def test_ll_fence_counts_beyond_63(mode):
 
 def test_ll_combine_writes_cannot_satisfy_dispatch_fences():
     """Regression: combine writes share the per-peer ControlBuffer with that
-    peer's own dispatch writes.  They must carry the reserved unfenced slot —
-    otherwise an early expert's combine stream inflates writes_seen[0] and an
-    el=0 expert's fence passes before its dispatch bucket is complete.
-    eps=1 puts every expert at slot 0; crossed routing makes one expert
-    finish (and start combining) while the other's dispatches are in flight;
-    a huge reorder window lets combines overtake them."""
+    peer's own dispatch writes.  They land in the return region, which is
+    NOT in the registered bucket table — were they attributed to a dispatch
+    guard, an early expert's combine stream would inflate writes_seen and
+    let a fence pass before its dispatch bucket is complete.  Crossed
+    routing makes one expert finish (and start combining) while the other's
+    dispatches are in flight; a huge reorder window lets combines overtake
+    them."""
     R, E, K, D, F, Tl = 2, 2, 1, 256, 8, 32
     rng = np.random.default_rng(6)
     x = rng.standard_normal((R, Tl, D)).astype(np.float32)
@@ -246,6 +319,30 @@ def test_ll_combine_writes_cannot_satisfy_dispatch_fences():
                                       reorder_window=500))
         out = w.run(x, ti, tw, wg, wu, wd)
         np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------- >63 experts/rank (DeepSeek-V3 EP) --
+@pytest.mark.parametrize("mode", ["rc", "srd"])
+@pytest.mark.parametrize("n_ranks", [2, 4])
+def test_ep_256_experts_matches_oracle(mode, n_ranks):
+    """256 routed experts at EP degree 2 and 4 (64 and 128 experts per rank
+    — the DeepSeek-V3-class regime the paper targets): both LL and HT match
+    the dense oracle on ordered and unordered transports.  The seed could
+    not represent this at all (``eps < 64`` assert; 6-bit wire slot aliased
+    expert e onto guard e % 64) — guards are now keyed by registered
+    address ranges, so there is no experts-per-rank ceiling."""
+    R, E, K, D, F, Tl = n_ranks, 256, 4, 8, 8, 8
+    x, ti, tw, wg, wu, wd = _problem(21, R, E, K, D, F, Tl)
+    ref = EPWorld.oracle(x, ti, tw, wg, wu, wd)
+    w = EPWorld(n_ranks=R, n_experts=E, top_k=K, d=D, f=F, capacity=Tl * K,
+                net_cfg=NetConfig(mode=mode, seed=3, reorder_window=64))
+    assert w.eps >= 64          # the regime the seed's codec excluded
+    out = w.run(x, ti, tw, wg, wu, wd)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+    w = EPWorld(n_ranks=R, n_experts=E, top_k=K, d=D, f=F,
+                net_cfg=NetConfig(mode=mode, seed=4, reorder_window=64))
+    out = w.run_ht(x, ti, tw, wg, wu, wd, n_chunks=2)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
 
 
 # ---------------------------------------------- HT mode on the substrate --
@@ -329,3 +426,63 @@ def test_srd_reorder_window_sweep(protocol):
     assert held_by_window[16] >= held_by_window[1], held_by_window
     assert held_by_window[256] >= held_by_window[16], held_by_window
     assert held_by_window[256] > held_by_window[1], held_by_window
+
+
+# ------------------------------------------------- network event queue ----
+def test_network_flush_honors_step_bound():
+    """flush(steps=N) delivers at most N events (the seed accepted and
+    silently ignored the parameter); flush() still drains completely."""
+    net = Network(NetConfig(mode="rc"), n_ranks=2, threadsafe=False)
+    got = []
+    net.register(1, got.append)
+    for i in range(10):
+        net.send(Message(src=0, dst=1, qp=0, kind="imm", dst_off=i,
+                         payload=None, imm=0))
+    assert net.flush(steps=3) == 3
+    assert len(got) == 3 and net.pending == 7
+    assert net.flush(steps=0) == 0 and len(got) == 3
+    assert net.flush() == 7
+    assert len(got) == 10 and net.pending == 0
+
+
+def test_network_threadsafe_concurrent_send_and_quiesce():
+    """Threaded-mode stress for the locked pending/next_event_t readers:
+    worker threads send() while the main thread steps and polls the
+    quiesce condition — no lost events, no races, heap drains to zero."""
+    n_threads, per_thread = 4, 200
+    net = Network(NetConfig(mode="srd", seed=3, reorder_window=32),
+                  n_ranks=2, threadsafe=True)
+    got = []
+    net.register(1, got.append)
+    done = threading.Event()
+
+    def sender(tid):
+        for i in range(per_thread):
+            net.send(Message(src=0, dst=1, qp=tid % 4, kind="imm",
+                             dst_off=tid * per_thread + i, payload=None,
+                             imm=0))
+
+    threads = [threading.Thread(target=sender, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+
+    def drain():
+        # the quiesce loop shape: poll pending/next_event_t between steps
+        while not (done.is_set() and net.pending == 0):
+            t = net.next_event_t()
+            assert t is None or t >= 0.0
+            _ = net.pending
+            if not net.step():
+                pass
+    dr = threading.Thread(target=drain)
+    dr.start()
+    for th in threads:
+        th.join(timeout=10)
+    done.set()
+    dr.join(timeout=10)
+    assert not dr.is_alive()
+    assert len(got) == n_threads * per_thread
+    assert sorted(m.dst_off for m in got) == \
+        list(range(n_threads * per_thread))
+    assert net.pending == 0

@@ -1,0 +1,283 @@
+"""Transport-semantics conformance fuzz harness (ISSUE 4 tentpole).
+
+Drives randomized command streams through the delivery-semantics layer and
+the full EP substrate, asserting the invariants the paper's §3.3/§4.1
+correctness story rests on:
+
+1. **Fence safety** — no completion fence applies before >= count writes
+   have landed *inside its registered bucket range* (and only writes from
+   the same peer count);
+2. **Per-channel seq-prefix closure** — a SEQ_ATOMIC applies only after
+   every smaller sequence on its channel applied, and once delivery
+   finishes each channel's applied prefix is contiguous;
+3. **Quiesce** — after the world drains, nothing is held in any control
+   buffer, no command is mid-execution, no message is in flight;
+4. **Oracle agreement** — the EP result equals the dense oracle bit-for-
+   bit-in-float.
+
+The matrix covers {rc, srd} x {ll, ht} x {inline, threaded} proxies and
+eps (experts per rank) in {1, 63, 64, 128} — the 64/128 points are exactly
+the regime the seed's 6-bit slot codec could not represent (DeepSeek-V3:
+256 routed experts at EP degree <= 4).  Each property runs both as a
+deterministic seeded sweep (always on, pinned repro seeds) and as a
+hypothesis property with shrinking when hypothesis is installed (the
+conftest stub skips those cleanly otherwise).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.transport import (ControlBuffer, EPWorld, GuardTable,
+                                  ImmKind, NetConfig, pack_imm)
+
+pytestmark = pytest.mark.timeout(120)   # a hung quiesce must fail fast
+
+EPS_GRID = (1, 63, 64, 128)             # experts per rank; > 63 is the point
+
+
+# ======================================================================
+# Part 1: ControlBuffer-level conformance (pure semantics, no network)
+# ======================================================================
+def _gen_stream(rng, n_buckets=4, bucket_bytes=32, n_channels=3):
+    """A random *sent* world: registered bucket table + per-channel command
+    streams with consecutive sequence numbers, fences with satisfiable
+    counts, and writes into unregistered memory (combine-return stand-ins).
+
+    Returns (guards, events); each event is one of
+      ("w", imm, dst_off, ch, seq)   write
+      ("s", imm, ch, seq)            seq atomic
+      ("f", imm, gid, need)          fence atomic
+    """
+    guards = GuardTable()
+    for g in range(n_buckets):
+        guards.register(g * bucket_bytes, bucket_bytes, g)
+    unregistered0 = n_buckets * bucket_bytes + 17
+
+    events = []
+    next_seq = [0] * n_channels
+    bucket_writes = [0] * n_buckets
+    for _ in range(int(rng.integers(4, 40))):
+        ch = int(rng.integers(0, n_channels))
+        if rng.random() < 0.75:            # a write somewhere
+            if rng.random() < 0.25:        # ... into unregistered memory
+                off = unregistered0 + int(rng.integers(0, 64))
+            else:
+                g = int(rng.integers(0, n_buckets))
+                off = g * bucket_bytes + int(rng.integers(0, bucket_bytes))
+                bucket_writes[g] += 1
+            seq = next_seq[ch]
+            next_seq[ch] += 1
+            events.append(("w", pack_imm(ImmKind.WRITE, ch, seq, 0), off,
+                           ch, seq))
+        else:                              # a seq atomic (HT chunk marker)
+            seq = next_seq[ch]
+            next_seq[ch] += 1
+            events.append(("s", pack_imm(ImmKind.SEQ_ATOMIC, ch, seq,
+                                         int(rng.integers(0, 1 << 16))),
+                           ch, seq))
+    # fences: required count <= writes landed in that bucket, so every
+    # guard is eventually satisfiable (quiesce must leave nothing held)
+    for g in range(n_buckets):
+        if bucket_writes[g] and rng.random() < 0.8:
+            need = int(rng.integers(1, bucket_writes[g] + 1))
+            events.append(("f", pack_imm(ImmKind.FENCE_ATOMIC, 0, 0, need),
+                           g, need))
+    return guards, events
+
+
+def _replay_checked(guards, events, perm, cb_guards=None,
+                    wire_gid=lambda g: g):
+    """Deliver ``events`` in ``perm`` order through a ControlBuffer,
+    asserting the fence/seq invariants at each apply, and the quiesce
+    invariant at the end.  Returns the apply log.
+
+    ``guards`` is the *ground-truth* bucket table the invariant checker
+    attributes writes with; the system under test runs on ``cb_guards``
+    (defaults to the same table) with fences addressed by ``wire_gid`` —
+    the split lets the harness emulate a broken keying (e.g. the seed's
+    slot aliasing) and prove the invariant catches it."""
+    cb = ControlBuffer(guards=cb_guards if cb_guards is not None else guards)
+    applied = []
+    writes_in = {}                     # gid -> applied writes (ground truth)
+    seqs_done = {}                     # ch -> set of applied seqs
+
+    def on_write(off, ch, seq):
+        gid = guards.resolve(off)
+        if gid is not None:
+            writes_in[gid] = writes_in.get(gid, 0) + 1
+        seqs_done.setdefault(ch, set()).add(seq)
+        applied.append(("w", ch, seq))
+
+    def on_seq(ch, seq):
+        done = seqs_done.setdefault(ch, set())
+        assert done >= set(range(seq)), \
+            f"SEQ_ATOMIC {seq} on ch {ch} applied before prefix closed"
+        done.add(seq)
+        applied.append(("s", ch, seq))
+
+    def on_fence(gid, need):
+        assert writes_in.get(gid, 0) >= need, \
+            f"fence(guard={gid}, need={need}) applied after only " \
+            f"{writes_in.get(gid, 0)} writes in its range"
+        applied.append(("f", gid, need))
+
+    for i in perm:
+        ev = events[i]
+        if ev[0] == "w":
+            _, imm, off, ch, seq = ev
+            cb.on_write(imm, lambda o=off, c=ch, s=seq: on_write(o, c, s),
+                        off)
+        elif ev[0] == "s":
+            _, imm, ch, seq = ev
+            cb.on_atomic(imm, lambda c=ch, s=seq: on_seq(c, s))
+        else:
+            _, imm, gid, need = ev
+            cb.on_atomic(imm, lambda g=gid, n=need: on_fence(g, n),
+                         guard=wire_gid(gid))
+    # reliable transport: everything delivered => everything applied,
+    # nothing held, every channel's seq prefix closed
+    assert len(applied) == len(events)
+    assert cb.n_held == 0
+    assert all(not h for h in cb._arrived.values())
+    return applied
+
+
+def _cb_case(seed):
+    rng = np.random.default_rng(seed)
+    guards, events = _gen_stream(rng)
+    perm = rng.permutation(len(events))
+    _replay_checked(guards, events, perm)
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_control_buffer_conformance_seeded(seed):
+    """Pinned-seed sweep of the semantics invariants (runs without
+    hypothesis; the property version below adds shrinking)."""
+    _cb_case(seed)
+
+
+@settings(max_examples=100, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1))
+def test_control_buffer_conformance_property(seed):
+    _cb_case(seed)
+
+
+def test_old_slot_keying_fence_aliasing_detected():
+    """Pinned repro of the bug this PR fixes: the seed keyed guards by a
+    6-bit wire slot, aliasing expert e onto guard e % 64 past 63 experts
+    per rank — writes for expert 0 counted toward expert 64's fence, which
+    then applied on a partially-landed bucket.  Emulating that keying as an
+    aliased guard table, the harness's fence-safety invariant catches the
+    corruption; the address-range table keeps the buckets distinct and the
+    invariant holds."""
+    bucket = 32
+    # ground truth: expert 0 and expert 64 own distinct buckets/guards
+    guards = GuardTable()
+    guards.register(0 * bucket, bucket, 0)
+    guards.register(64 * bucket, bucket, 64)
+    # stream: 3 writes into expert-0's bucket, then a fence for expert 64's
+    # bucket (count 3) — expert 64's own writes never sent
+    events = [("w", pack_imm(ImmKind.WRITE, 0, s, 0), 0 * bucket + 4 * s,
+               0, s) for s in range(3)]
+    events.append(("f", pack_imm(ImmKind.FENCE_ATOMIC, 0, 0, 3), 64, 3))
+    perm = np.arange(len(events))
+
+    # old keying: both buckets count toward guard 64 % 64 == 0 and the
+    # fence addresses guard 0 too => it applies with ZERO writes in expert
+    # 64's bucket — the harness's fence-safety invariant trips
+    aliased = GuardTable()
+    aliased.register(0 * bucket, bucket, 0)          # expert 0 -> guard 0
+    aliased.register(64 * bucket, bucket, 64 % 64)   # expert 64 -> guard 0!
+    with pytest.raises(AssertionError, match="applied after only"):
+        _replay_checked(guards, events, perm, cb_guards=aliased,
+                        wire_gid=lambda g: g % 64)
+
+    # address-range keying: distinct guards; the fence is (correctly) held
+    # until expert 64's writes land — deliver them and it applies
+    cb = ControlBuffer(guards=guards)
+    for _, imm, off, ch, seq in events[:3]:
+        cb.on_write(imm, lambda: None, off)
+    fired = []
+    cb.on_atomic(events[3][1], lambda: fired.append(1), guard=64)
+    assert not fired and cb.n_held == 1      # held: bucket 64 is empty
+    for s in range(3):
+        cb.on_write(pack_imm(ImmKind.WRITE, 1, s, 0), lambda: None,
+                    64 * bucket + 4 * s)
+    assert fired and cb.n_held == 0
+
+
+# ======================================================================
+# Part 2: end-to-end EP protocol over the full matrix
+# ======================================================================
+def _run_ep_case(mode, proto, eps, threaded, seed):
+    rng = np.random.default_rng(seed)
+    R = 2
+    E = eps * R
+    K = int(rng.integers(1, 4))
+    D = F = 8
+    Tl = int(rng.integers(4, 9))
+    window = int(rng.choice([1, 16, 128]))
+    x = rng.standard_normal((R, Tl, D)).astype(np.float32)
+    ti = rng.integers(0, E, size=(R, Tl, K)).astype(np.int32)
+    tw = rng.random((R, Tl, K)).astype(np.float32)
+    tw /= tw.sum(-1, keepdims=True)
+    wg = (rng.standard_normal((E, D, F)) * 0.2).astype(np.float32)
+    wu = (rng.standard_normal((E, D, F)) * 0.2).astype(np.float32)
+    wd = (rng.standard_normal((E, F, D)) * 0.2).astype(np.float32)
+
+    w = EPWorld(n_ranks=R, n_experts=E, top_k=K, d=D, f=F, capacity=Tl * K,
+                net_cfg=NetConfig(mode=mode, seed=seed,
+                                  reorder_window=window),
+                use_threads=threaded, n_threads=2)
+    try:
+        if proto == "ll":
+            out = w.run(x, ti, tw, wg, wu, wd)
+        else:
+            out = w.run_ht(x, ti, tw, wg, wu, wd,
+                           n_chunks=int(rng.integers(1, 5)))
+        ref = EPWorld.oracle(x, ti, tw, wg, wu, wd)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+        # quiesce invariants: nothing in flight, queued, or held anywhere
+        assert w.net.pending == 0
+        for p in w.proxies:
+            assert p.error is None
+            assert not p.busy
+            for cb in p.ctrl.values():
+                assert cb.n_held == 0, "quiesce left a guarded atomic held"
+                # per-channel seq-prefix closure: every sequence the peer
+                # consumed was applied contiguously
+                assert all(not h for h in cb._arrived.values())
+    finally:
+        if threaded:
+            for p in w.proxies:
+                p.stop()
+
+
+@pytest.mark.parametrize("mode", ["rc", "srd"])
+@pytest.mark.parametrize("eps", EPS_GRID)
+def test_ep_conformance_inline_seeded(mode, eps):
+    """Deterministic matrix sweep: {rc, srd} x {ll, ht} x inline proxies x
+    eps in {1, 63, 64, 128} against the dense oracle + quiesce invariants."""
+    for proto in ("ll", "ht"):
+        for seed in (0, 1):
+            _run_ep_case(mode, proto, eps, threaded=False, seed=seed)
+
+
+@pytest.mark.parametrize("proto", ["ll", "ht"])
+@pytest.mark.parametrize("eps", [1, 64])
+def test_ep_conformance_threaded_seeded(proto, eps):
+    """Threaded-proxy points of the matrix (worker threads drain FIFOs
+    concurrently with the event-clock pump; exercises the locked
+    pending/next_event_t quiesce path)."""
+    _run_ep_case("srd", proto, eps, threaded=True, seed=2)
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1),
+       mode=st.sampled_from(["rc", "srd"]),
+       proto=st.sampled_from(["ll", "ht"]),
+       eps=st.sampled_from(EPS_GRID))
+def test_ep_conformance_property(seed, mode, proto, eps):
+    """Hypothesis form of the matrix sweep: randomized routing/topology
+    with shrinking toward a minimal failing (seed, mode, proto, eps)."""
+    _run_ep_case(mode, proto, eps, threaded=False, seed=seed)
