@@ -50,7 +50,9 @@ def gen_seed(top_idx: np.ndarray, capacity: int, n_channels: int = 8):
                 dst, el = e // eps, e % eps
                 dst_off = recv0 + ((r * eps + el) * capacity
                                    + int(slot_of[r, t, k])) * tb
-                ch = (t + k) % n_channels
+                # expert-keyed write channel (matches the shipped stream;
+                # the coalescer needs one bucket's writes on one channel)
+                ch = e % n_channels
                 out.append(TransferCmd(
                     op=Op.WRITE, dst_rank=dst, channel=ch,
                     src_off=send0 + t * tb, dst_off=dst_off,

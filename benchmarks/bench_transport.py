@@ -1,0 +1,144 @@
+"""ISSUE 5 microbenchmark: the batched proxy→network→receiver fast path.
+
+Three stages of the transport hot path at fig15 scale (50k descriptors),
+scalar (PR 4) vs columnar/coalesced (this PR), all in one session so the
+A/B is apples-to-apples on this machine:
+
+- **proxy drain**: ``Proxy.drain_inline`` consuming pre-pushed FIFO rings —
+  per-row ``TransferCmd.unpack`` + per-message ``Network.send`` vs the
+  columnar ``_execute_batch`` (vectorized decode/seq/imm, write coalescing,
+  one ``send_batch`` per ring batch).  Acceptance: columnar >= 5x.
+- **wire delivery**: draining the scheduled event heap through
+  ``deliver_ready`` into the receiving proxy (guard resolution + seq
+  bookkeeping), scalar messages vs coalesced runs.
+- **deterministic counters** on a fig08-shaped EP workload (E=32, K=6
+  routing over the substrate): delivered wire messages with and without
+  coalescing, exact-gated by ``benchmarks/run.py --compare`` — the
+  coalescing win recorded machine-independently.
+"""
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, make_ep_problem
+from repro.core.transport import EPWorld, NetConfig, Network, Op, Proxy, \
+    SymmetricMemory, pack_cmds
+from repro.core.transport.fifo import FLAG_FENCE
+
+N_CMDS = 50_000
+N_BUCKETS = 64          # receive buckets (one fence guard each)
+TB = 64                 # bytes per write
+N_CHANNELS = 8
+
+
+def _stream():
+    """A bucket-ordered LL-shaped command stream: N_CMDS writes landing
+    contiguously per bucket (the coalescer's food), one fence per bucket."""
+    per = N_CMDS // N_BUCKETS
+    i = np.arange(N_BUCKETS * per)
+    bucket = i // per
+    writes = pack_cmds(int(Op.WRITE), 1, bucket % N_CHANNELS,
+                       (i % per) * TB, N_CMDS * TB + i * TB, TB, 0)
+    fences = pack_cmds(int(Op.ATOMIC), 1,
+                       np.arange(N_BUCKETS) % N_CHANNELS, per,
+                       np.arange(N_BUCKETS), 0, 0, FLAG_FENCE)
+    return np.concatenate([writes, fences]), per
+
+
+def _world(columnar):
+    net = Network(NetConfig(mode="srd", seed=0), 2, threadsafe=False)
+    mem_bytes = 2 * N_CMDS * TB + 4096
+    p0 = Proxy(0, net, SymmetricMemory.create(mem_bytes),
+               n_channels=N_CHANNELS, k_max_inflight=8192,
+               columnar=columnar)
+    p1 = Proxy(1, net, SymmetricMemory.create(mem_bytes),
+               n_channels=N_CHANNELS, columnar=columnar)
+    per = N_CMDS // N_BUCKETS
+    p1.register_table(N_CMDS * TB + np.arange(N_BUCKETS) * per * TB,
+                      per * TB, np.arange(N_BUCKETS))
+    return net, p0, p1
+
+
+def bench_drain(columnar, iters=5):
+    """Median drain+send / delivery time for the full stream."""
+    words, _ = _stream()
+    drains, delivers = [], []
+    for _ in range(iters):
+        net, p0, p1 = _world(columnar)
+        for c in range(N_CHANNELS):             # pre-fill the rings
+            rows = words[np.asarray(words[:, 0] >> 16 & 0xFF) == c]
+            assert p0.channels[c].try_push_batch(rows) == len(rows)
+        t0 = time.perf_counter()
+        p0.drain_inline()
+        t1 = time.perf_counter()
+        while net.deliver_ready():
+            pass
+        t2 = time.perf_counter()
+        drains.append(t1 - t0)
+        delivers.append(t2 - t1)
+        assert net.pending == 0
+        for cb in p1.ctrl.values():
+            assert cb.n_held == 0
+    drains.sort(), delivers.sort()
+    return (drains[len(drains) // 2] * 1e6,
+            delivers[len(delivers) // 2] * 1e6, net)
+
+
+def bench_counters():
+    """fig08-shaped substrate workload (E=32, K=6): delivered wire-message
+    count with and without write coalescing.  Event-clock counters of a
+    seeded inline run — exactly reproducible, exact-gated in compare."""
+    R, E, K, D, F, Tl = 4, 32, 6, 64, 64, 128
+    x, ti, tw, wg, wu, wd = make_ep_problem(3, R, E, K, D, F, Tl)
+    out = {}
+    for tag, coal in (("scalar_msgs", False), ("coalesced_msgs", True)):
+        w = EPWorld(n_ranks=R, n_experts=E, top_k=K, d=D, f=F,
+                    capacity=Tl * K, net_cfg=NetConfig(mode="srd", seed=2),
+                    coalesce=coal)
+        ref = w.run(x, ti, tw, wg, wu, wd)
+        assert np.isfinite(ref).all()
+        out[tag] = w.net
+    return out
+
+
+def main():
+    n_total = N_CMDS + N_BUCKETS
+    t_scalar, d_scalar, _ = bench_drain(columnar=False, iters=3)
+    t_col, d_col, net = bench_drain(columnar=True)
+    emit(f"bench_transport/proxy_drain/scalar/cmds={n_total}", t_scalar,
+         f"{n_total / t_scalar:.2f}cmds_per_us")
+    # the speedup ratio rides the derived column (a standalone ratio row
+    # would make the 1.25x gate flag *improvements* as regressions)
+    emit(f"bench_transport/proxy_drain/columnar/cmds={n_total}", t_col,
+         f"{n_total / t_col:.2f}cmds_per_us;"
+         f"coalesced_msgs={net.coalesced_msgs};"
+         f"speedup={t_scalar / t_col:.1f}x (acceptance: >=5x)")
+    emit(f"bench_transport/wire_deliver/scalar/cmds={n_total}", d_scalar,
+         "per-message on_write")
+    emit(f"bench_transport/wire_deliver/columnar/cmds={n_total}", d_col,
+         f"{d_scalar / d_col:.1f}x vs scalar (vectorized guard resolve)")
+    # same-session regression gate: absolute wall clock flaps with host
+    # load (the compare gate skips these rows), but the scalar/columnar
+    # ratio is measured in one process and load cancels out — a drop
+    # below 4x means the columnar drain itself regressed (acceptance 5x;
+    # observed 7.6-9x).
+    assert t_scalar / t_col >= 4.0, \
+        f"columnar proxy drain regressed: {t_scalar / t_col:.1f}x < 4x"
+
+    nets = bench_counters()
+    scalar, coal = nets["scalar_msgs"], nets["coalesced_msgs"]
+    assert scalar.bytes_moved == coal.bytes_moved
+    emit("bench_transport/counters/fig08ll/delivered_scalar",
+         scalar.delivered, "exact-gated")
+    emit("bench_transport/counters/fig08ll/delivered_coalesced",
+         coal.delivered,
+         f"exact-gated;reduction={scalar.delivered / coal.delivered:.1f}x")
+    emit("bench_transport/counters/fig08ll/coalesced_msgs",
+         coal.coalesced_msgs,
+         f"exact-gated;coalesced_writes={coal.coalesced_writes}")
+    emit("bench_transport/counters/fig08ll/bytes_moved", coal.bytes_moved,
+         "exact-gated;identical scalar vs coalesced")
+
+
+if __name__ == "__main__":
+    main()

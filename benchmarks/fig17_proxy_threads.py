@@ -31,7 +31,8 @@ def run(n_threads: int) -> float:
 def run_overlap(protocol: str, n_chunks: int = 4):
     """Event-clock overlap: expert compute launching while dispatch writes
     are still in flight (ISSUE 2 acceptance).  Returns the simulated
-    completion time and the timeline."""
+    completion time, the timeline, and the world (its deterministic
+    transport counters feed the exact-gated fig17_counters rows)."""
     R, E, K, D, F, Tl = 4, 16, 4, 64, 64, 128
     x, ti, tw, wg, wu, wd = make_ep_problem(1, R, E, K, D, F, Tl)
     w = EPWorld(n_ranks=R, n_experts=E, top_k=K, d=D, f=F, capacity=Tl * K,
@@ -44,7 +45,22 @@ def run_overlap(protocol: str, n_chunks: int = 4):
         out = w.run_ht(x, ti, tw, wg, wu, wd, n_chunks=n_chunks)
     ref = EPWorld.oracle(x, ti, tw, wg, wu, wd)
     assert np.allclose(out, ref, rtol=1e-4, atol=1e-5)
-    return w.net.clock_us, w.timeline
+    return w.net.clock_us, w.timeline, w
+
+
+def emit_counters(proto: str, w: EPWorld):
+    """Deterministic transport counters from an inline run: event-clock
+    delivery of a seeded workload makes these exactly reproducible, so the
+    perf gate holds them at EXACT equality (benchmarks/run.py) — the
+    compare signal for the threaded fig17 rows, whose wall clock flaps
+    with host scheduling."""
+    pcie = sum(c.pcie_reads for p in w.proxies for c in p.channels)
+    emit(f"fig17_counters/{proto}/delivered", w.net.delivered, "exact-gated")
+    emit(f"fig17_counters/{proto}/bytes_moved", w.net.bytes_moved,
+         "exact-gated")
+    emit(f"fig17_counters/{proto}/coalesced_msgs", w.net.coalesced_msgs,
+         f"exact-gated;coalesced_writes={w.net.coalesced_writes}")
+    emit(f"fig17_counters/{proto}/pcie_reads", pcie, "exact-gated")
 
 
 def main():
@@ -59,14 +75,15 @@ def main():
     # pipelined overlap on the event clock: first FFN launch vs last
     # dispatch-write delivery; positive overlap_us means compute started
     # while dispatch was still in flight
-    t_barrier, _ = run_overlap("ll_barrier")
+    t_barrier, _, _ = run_overlap("ll_barrier")
     for proto in ("ll", "ht"):
-        t_sim, tl = run_overlap(proto)
+        t_sim, tl, w = run_overlap(proto)
         emit(f"fig17_overlap/{proto}", t_sim,
              f"overlap_us={tl['overlap_us']:.2f};"
              f"first_compute_us={tl['first_compute_us']:.2f};"
              f"last_dispatch_write_us={tl['last_dispatch_write_us']:.2f};"
              f"speedup_vs_barrier={t_barrier / t_sim:.2f}x")
+        emit_counters(proto, w)
     emit("fig17_overlap/ll_barrier", t_barrier, "no-overlap baseline")
 
 

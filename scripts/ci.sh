@@ -26,14 +26,16 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
 REPRO_KERNEL_MODE=interpret PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -x -q tests/test_kernel_modes.py
 
-# Benchmark smoke: one host benchmark end-to-end, plus the machine-readable
-# results file the perf trajectory is tracked with across PRs, gated
-# against the committed baseline (fails on >25% us_per_call regressions).
+# Benchmark smoke: two host benchmarks end-to-end (fig15 FIFO stress +
+# the bench_transport batched-path microbench, whose counter rows are
+# exact-gated), plus the machine-readable results file the perf trajectory
+# is tracked with across PRs, gated against the committed baseline (fails
+# on >25% us_per_call regressions; counter rows must match exactly).
 BENCH_JSON="$(mktemp -t bench_smoke.XXXXXX.json)"
 trap 'rm -f "$BENCH_JSON"' EXIT
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --only fig15 --json "$BENCH_JSON" \
-    --compare BENCH_results.json > /dev/null
+    python -m benchmarks.run --only fig15,bench_transport \
+    --json "$BENCH_JSON" --compare BENCH_results.json > /dev/null
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} BENCH_JSON="$BENCH_JSON" python - <<'EOF'
 import json, os
 from benchmarks.run import validate_results

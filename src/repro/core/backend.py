@@ -107,7 +107,8 @@ class SimulatedRDMABackend:
     jit_compatible = False
 
     def __init__(self, net_cfg=None, n_channels: int = 8,
-                 use_threads: bool = False, n_threads: int = 4):
+                 use_threads: bool = False, n_threads: int = 4,
+                 columnar: bool = True, coalesce: bool = True):
         from repro.core.transport.simulator import NetConfig
         self.net_cfg = net_cfg or NetConfig(mode="srd", seed=0)
         self.n_channels = n_channels
@@ -115,6 +116,10 @@ class SimulatedRDMABackend:
         # semantics conformance fuzz drives both); inline is deterministic
         self.use_threads = use_threads
         self.n_threads = n_threads
+        # columnar=False runs the scalar TransferCmd drain (the conformance
+        # oracle); coalesce=False disables RDMA write coalescing only
+        self.columnar = columnar
+        self.coalesce = coalesce
         self.last_world = None      # exposed for stats/introspection
 
     def dispatch_combine(self, spec, x, top_idx, top_w, expert_fn):
@@ -138,7 +143,8 @@ class SimulatedRDMABackend:
                         capacity=Tl * K, net_cfg=self.net_cfg,
                         n_channels=self.n_channels,
                         use_threads=self.use_threads,
-                        n_threads=self.n_threads)
+                        n_threads=self.n_threads,
+                        columnar=self.columnar, coalesce=self.coalesce)
         xs = x.reshape(R, Tl, D)
         tis = top_idx.reshape(R, Tl, K)
         tws = top_w.reshape(R, Tl, K)

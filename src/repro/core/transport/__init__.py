@@ -1,13 +1,15 @@
 from repro.core.transport.ep_executor import (EPWorld, np_grouped_swiglu,
                                               np_swiglu)
-from repro.core.transport.fifo import (FLAG_FENCE, FifoChannel, Op,
-                                       TransferCmd, pack_cmds)
+from repro.core.transport.fifo import (FLAG_FENCE, CmdColumns, FifoChannel,
+                                       Op, TransferCmd, pack_cmds,
+                                       unpack_cmds)
 from repro.core.transport.proxy import Proxy, SymmetricMemory
 from repro.core.transport.semantics import (ControlBuffer, GuardTable,
                                             ImmKind, pack_imm, unpack_imm)
 from repro.core.transport.simulator import Message, NetConfig, Network
 
 __all__ = ["EPWorld", "np_grouped_swiglu", "np_swiglu", "FLAG_FENCE",
-           "FifoChannel", "Op", "TransferCmd", "pack_cmds", "Proxy",
-           "SymmetricMemory", "ControlBuffer", "GuardTable", "ImmKind",
-           "pack_imm", "unpack_imm", "Message", "NetConfig", "Network"]
+           "CmdColumns", "FifoChannel", "Op", "TransferCmd", "pack_cmds",
+           "unpack_cmds", "Proxy", "SymmetricMemory", "ControlBuffer",
+           "GuardTable", "ImmKind", "pack_imm", "unpack_imm", "Message",
+           "NetConfig", "Network"]

@@ -69,6 +69,9 @@ class CommandStreams(NamedTuple):
     combine_channel: np.ndarray
     entry_expert: np.ndarray    # global expert id per kept entry
     guard_table: tuple          # (bases, extents, guard_ids) receive buckets
+    ret_pos: np.ndarray         # (R, Tl, K) expert-major return slot per
+    #                             choice (0 for invalid entries) — the
+    #                             source's final reduce gathers through it
 
 
 def build_command_streams(top_idx: np.ndarray, n_experts: int, eps: int,
@@ -100,26 +103,53 @@ def build_command_streams(top_idx: np.ndarray, n_experts: int, eps: int,
     dst = ti // eps                                     # (R, Tl, K)
     el = np.where(wp.valid, ti % eps, 0)
     t_idx = np.arange(Tl, dtype=np.int64)[None, :, None]
-    k_idx = np.arange(K, dtype=np.int64)[None, None, :]
-    ch = np.broadcast_to((t_idx + k_idx) % n_channels, ti.shape)
     src_off = np.broadcast_to(send0 + t_idx * tb, ti.shape)
     # dispatch writes land in the (src, expert) receive bucket at the plan's
-    # arrival-order slot; combine writes come straight back from that bucket
-    # into the per-(token, choice) return slot
-    recv_off = recv0 + ((np.arange(R)[:, None, None] * eps + el) * capacity
-                        + wp.rank) * tb
-    ret_off = np.broadcast_to(ret0 + (t_idx * K + k_idx) * tb, ti.shape)
+    # arrival-order slot; combine writes come back from that bucket into
+    # the source's expert-major return region (``ret_pos`` below)
+    bucket = np.arange(R)[:, None, None] * eps + el     # (src, expert) id
+    recv_off = recv0 + (bucket * capacity + wp.rank) * tb
     src_rank = np.broadcast_to(np.arange(R)[:, None, None], ti.shape)
 
-    writes = pack_cmds(int(Op.WRITE), dst, ch, src_off, recv_off, tb,
+    # both write streams ride an expert-keyed channel and are emitted
+    # ordered by (destination, landing offset) within each (pusher,
+    # channel): one receive bucket's writes form one contiguous ascending
+    # run, which is what the proxy's write coalescer turns into single
+    # batched RDMA messages.  Sequence semantics don't care: LL writes
+    # gate nothing, and seqs are assigned at drain time in stream order.
+    ch_w = np.where(wp.valid, ti % n_channels, 0)       # global expert key
+    writes = pack_cmds(int(Op.WRITE), dst, ch_w, src_off, recv_off, tb,
                        0)[valid]
+    w_pusher = src_rank.reshape(-1)[valid]
+    w_channel = ch_w.reshape(-1)[valid]
+    wperm = np.lexsort((recv_off.reshape(-1)[valid],
+                        dst.reshape(-1)[valid], w_channel, w_pusher))
+    writes, w_pusher, w_channel = \
+        writes[wperm], w_pusher[wperm], w_channel[wperm]
     # combine writes need no special marking: they land in the return
     # region, which is simply not in the registered bucket table, so they
     # can never count toward a dispatch fence guard (the pipelined executor
-    # has combines in flight while other buckets' dispatches still are)
-    combines = pack_cmds(int(Op.WRITE), src_rank, ch, recv_off, ret_off, tb,
-                         0)[valid]
-    ch_flat = ch.reshape(-1)[valid]
+    # has combines in flight while other buckets' dispatches still are).
+    # The return layout is expert-major per source (one contiguous block
+    # per (expert, source), entry order = bucket slot order) rather than
+    # (token, choice)-striped: expert e's combine stream back to source r
+    # is then one ascending contiguous run the coalescer can merge, and
+    # the source's final reduce gathers results back through ``ret_pos``.
+    counts64 = np.asarray(wp.counts, np.int64)          # (R, n_experts)
+    bstart = np.cumsum(counts64, axis=1) - counts64     # exclusive per-src
+    pos = np.where(wp.valid,
+                   bstart[np.arange(R)[:, None, None],
+                          np.where(wp.valid, ti, 0)] + wp.rank, 0)
+    ret_off = ret0 + pos * tb
+    combines = pack_cmds(int(Op.WRITE), src_rank, ch_w, recv_off, ret_off,
+                         tb, 0)[valid]
+    c_pusher = dst.reshape(-1)[valid]
+    c_channel = ch_w.reshape(-1)[valid]
+    cperm = np.lexsort((ret_off.reshape(-1)[valid],
+                        src_rank.reshape(-1)[valid], c_channel, c_pusher))
+    combines, c_pusher, c_channel = \
+        combines[cperm], c_pusher[cperm], c_channel[cperm]
+    entry_expert = ti.reshape(-1)[valid][cperm]
 
     # fence for (src r, expert e): guard id == counter id == r*eps + el,
     # the index of the (r, el) receive bucket in the registered table
@@ -131,14 +161,15 @@ def build_command_streams(top_idx: np.ndarray, n_experts: int, eps: int,
 
     return CommandStreams(
         plan=wp,
-        writes=writes, write_pusher=src_rank.reshape(-1)[valid],
-        write_channel=ch_flat,
+        writes=writes, write_pusher=w_pusher,
+        write_channel=w_channel,
         fences=fences, fence_pusher=r_f, fence_channel=e_f % n_channels,
-        combines=combines, combine_pusher=dst.reshape(-1)[valid],
-        combine_channel=ch_flat,
-        entry_expert=ti.reshape(-1)[valid],
+        combines=combines, combine_pusher=c_pusher,
+        combine_channel=c_channel,
+        entry_expert=entry_expert,
         guard_table=planlib.receive_bucket_table(
-            ti.shape[0] * eps, recv0, capacity * tb))
+            ti.shape[0] * eps, recv0, capacity * tb),
+        ret_pos=pos)
 
 
 def np_swiglu(x: np.ndarray, wg, wu, wd) -> np.ndarray:
@@ -188,6 +219,11 @@ class EPWorld:
     n_channels: int = 8
     n_threads: int = 4
     use_threads: bool = False
+    # columnar=False drains through the scalar TransferCmd codec (the
+    # conformance oracle); coalesce=False keeps the columnar drain but
+    # issues one wire message per descriptor
+    columnar: bool = True
+    coalesce: bool = True
 
     def __post_init__(self):
         assert self.n_experts % self.n_ranks == 0
@@ -208,7 +244,8 @@ class EPWorld:
         mems = [SymmetricMemory.create(total_bytes, n_counters=n_counters)
                 for _ in range(R)]
         proxies = [Proxy(r, self.net, mems[r], n_threads=self.n_threads,
-                         n_channels=self.n_channels)
+                         n_channels=self.n_channels, columnar=self.columnar,
+                         coalesce=self.coalesce)
                    for r in range(R)]
         self.proxies, self.mems = proxies, mems
         return mems, proxies
@@ -369,11 +406,14 @@ class EPWorld:
         self._finish_timeline()
 
         # -------------------- weighted reduce at source -------------------
+        # the return region is expert-major (coalescable combine runs);
+        # gather each (token, choice)'s partial back through ret_pos
         out = np.zeros((R, Tl, D), np.float64)
         for r in range(R):
             ret = _from_bytes(mems[r].data[ret0:ret0 + Tl * K * tb],
-                              (Tl, K, D))
-            out[r] = np.einsum("tkd,tk->td", ret.astype(np.float64),
+                              (Tl * K, D))
+            g = ret[np.asarray(cs.ret_pos[r])]          # (Tl, K, D)
+            out[r] = np.einsum("tkd,tk->td", g.astype(np.float64),
                                np.where(wp.valid[r], top_w[r], 0.0)
                                .astype(np.float64))
         return out.astype(np.float32)
@@ -604,11 +644,28 @@ class EPWorld:
         proxies = self.proxies
         self._dirty = True
         if self.use_threads:
-            # worker threads drain concurrently; block on ring space
-            # (the paper's kMaxInflight sender pacing, §3.1)
+            # worker threads drain concurrently; pace on ring space (the
+            # paper's kMaxInflight sender flow control, §3.1): when the
+            # ring is full, poll the outstanding window's completion in one
+            # lock round-trip per spin instead of one check per index
             if not proxies[r]._threads:
                 proxies[r].start()
-            proxies[r].push_batch(ch, words, block=True)
+            c = proxies[r].channels[ch % len(proxies[r].channels)]
+            deadline = time.monotonic() + 60.0
+            done = 0
+            while done < len(words):
+                done += c.try_push_batch(words[done:])
+                if done >= len(words):
+                    break
+                tail = c._tail              # producer-owned counter
+                window = np.arange(max(0, tail - c.capacity), tail)
+                # one locked head read answers the whole outstanding
+                # window; the ring has space exactly when the OLDEST
+                # outstanding slot ([0]) has completed
+                while not c.check_completion_batch(window)[0]:
+                    if time.monotonic() > deadline:
+                        raise TimeoutError("FIFO full: consumer stalled")
+                    time.sleep(1e-5)
             return
         done = 0
         while done < len(words):
@@ -625,8 +682,10 @@ class EPWorld:
         flight — the event-clock condition that replaced the seed's fixed
         500-iteration polling loop.  Deliveries append readiness events to
         ``ready``; ``launch`` consumes them between deliveries, so compute
-        interleaves with in-flight traffic."""
-        step = self.net.step
+        interleaves with in-flight traffic.  Delivery runs through
+        ``Network.deliver_ready``: every event sharing the frontier
+        timestamp lands in one lock round-trip."""
+        deliver = self.net.deliver_ready
         if self.use_threads:
             for p in proxies:
                 if not p._threads:
@@ -634,14 +693,14 @@ class EPWorld:
             deadline = time.monotonic() + 120.0
             calm = 0
             while True:
-                stepped = step()
+                delivered = deliver()
                 while ready:
                     launch(ready.pop())
                 for p in proxies:  # surface worker failures immediately
                     if p.error is not None:
                         raise RuntimeError(
                             f"proxy {p.rank} worker failed") from p.error
-                if stepped:
+                if delivered:
                     calm = 0
                     continue
                 if any(p.busy for p in proxies) or self.net.pending:
@@ -659,10 +718,10 @@ class EPWorld:
                 self._dirty = False
                 for p in proxies:
                     p.drain_inline()
-            stepped = step()
+            delivered = deliver()
             while ready:
                 launch(ready.pop())
-            if not stepped and not self._dirty:
+            if not delivered and not self._dirty:
                 return
 
     @staticmethod

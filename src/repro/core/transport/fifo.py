@@ -17,7 +17,7 @@ import threading
 import time
 from dataclasses import dataclass
 from enum import IntEnum
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import numpy as np
 
@@ -94,6 +94,34 @@ def pack_cmds(op, dst_rank, channel, src_off, dst_off, length, value,
     out[:, 3] = ((length.reshape(-1) & 0xFFFFF)
                  | ((value.reshape(-1) & 0xFFF) << 20)).astype(np.uint32)
     return out
+
+
+class CmdColumns(NamedTuple):
+    """Columnar view of a packed (N, 4) descriptor batch: one int64 array
+    per field (the batched consumer's working set — no per-row TransferCmd
+    objects on the hot path; :meth:`TransferCmd.unpack` stays the
+    scalar/debug codec)."""
+
+    op: np.ndarray
+    dst_rank: np.ndarray
+    channel: np.ndarray
+    src_off: np.ndarray
+    dst_off: np.ndarray
+    length: np.ndarray
+    value: np.ndarray
+    flags: np.ndarray
+
+
+def unpack_cmds(words: np.ndarray) -> CmdColumns:
+    """Vectorized inverse of :func:`pack_cmds`: decode an (N, 4) uint32
+    descriptor batch into field columns with bit-ops.  Column row i equals
+    the fields ``TransferCmd.unpack(words[i])`` would produce."""
+    w = words.astype(np.int64)
+    w0, w3 = w[:, 0], w[:, 3]
+    return CmdColumns(op=w0 & 0xF, dst_rank=(w0 >> 4) & 0xFFF,
+                      channel=(w0 >> 16) & 0xFF, src_off=w[:, 1],
+                      dst_off=w[:, 2], length=w3 & 0xFFFFF,
+                      value=(w3 >> 20) & 0xFFF, flags=(w0 >> 24) & 0xFF)
 
 
 class FifoChannel:
@@ -201,14 +229,26 @@ class FifoChannel:
         with self._lock:
             return self._head > idx
 
+    def check_completion_batch(self, idxs) -> np.ndarray:
+        """Batched :meth:`check_completion`: one locked head read answers
+        for the whole index window (the flow-control wait loop polls its
+        outstanding window in ONE lock round-trip, not one per index)."""
+        with self._lock:
+            head = self._head
+        return np.asarray(idxs, np.int64) < head
+
     # ----------------------------------------------------- consumer (CPU) --
     def poll(self) -> Optional[tuple[int, TransferCmd]]:
-        """Read (without consuming) the head command."""
+        """Read (without consuming) the head command.  The row is copied
+        while the lock is held: a wrapping producer may overwrite the slot
+        the moment the head counter is published as free, so decoding from
+        ``self.buf`` after release would race it."""
         with self._lock:
             if self._head >= self._tail:
                 return None
             idx = self._head
-        return idx, TransferCmd.unpack(self.buf[idx % self.capacity])
+            row = self.buf[idx % self.capacity].copy()
+        return idx, TransferCmd.unpack(row)
 
     def pop(self) -> Optional[tuple[int, TransferCmd]]:
         with self._not_full:

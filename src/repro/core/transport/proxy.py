@@ -7,6 +7,13 @@ subset of FIFO channels (thread i serves channels i, i+T, ... — no shared
 state between threads, as in the paper).  QP selection round-robins across
 the thread's QPs unless the command pins a channel (ordering domain).
 
+The consumer is columnar by default (DESIGN.md §13): each drained
+``pop_all`` batch is decoded with vectorized bit-ops, contiguous write
+runs coalesce into single wire messages carrying immediate vectors, and
+the whole batch is issued through ``Network.send_batch`` under one lock.
+``columnar=False`` keeps the scalar per-descriptor path alive as the
+conformance oracle the fuzz harness holds the batched path to.
+
 Atomics are emulated EFA-style (§4.1): a zero-byte write carrying the value
 in immediate data; the receiver proxy updates host-memory counters when the
 guard in the ControlBuffer passes.  For ``Op.ATOMIC`` commands the 32-bit
@@ -38,12 +45,17 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core.transport.fifo import FLAG_FENCE, FifoChannel, Op, TransferCmd
+from repro.core.transport.fifo import (FLAG_FENCE, FifoChannel, Op,
+                                       TransferCmd, unpack_cmds)
 from repro.core.transport.semantics import (FENCE_COUNT_MAX, IMM_VAL_MAX,
                                             N_CHANNELS_MAX, SEQ_MOD,
                                             ControlBuffer, GuardTable,
                                             ImmKind, pack_imm, unpack_imm)
 from repro.core.transport.simulator import Message, Network
+
+
+# enum lookup for batch error reporting (matches the scalar path's message)
+_OP_OF = {int(o): o for o in Op}
 
 
 @dataclass
@@ -63,13 +75,21 @@ class SymmetricMemory:
 class Proxy:
     def __init__(self, rank: int, net: Network, mem: SymmetricMemory,
                  n_threads: int = 4, n_channels: int = 8,
-                 k_max_inflight: int = 64):
+                 k_max_inflight: int = 64, columnar: bool = True,
+                 coalesce: bool = True):
         assert n_channels <= N_CHANNELS_MAX, \
             f"imm codec carries {N_CHANNELS_MAX} channels max"
         self.rank = rank
         self.net = net
         self.mem = mem
         self.n_threads = n_threads
+        # columnar=False drains command-by-command through the scalar
+        # TransferCmd codec — the conformance oracle the fuzz harness holds
+        # the batched path to; coalesce=False keeps the columnar drain but
+        # issues one wire message per descriptor (bit-identical schedule to
+        # the scalar path)
+        self.columnar = columnar
+        self.coalesce = coalesce and columnar
         self.channels = [FifoChannel(k_max_inflight) for _ in range(n_channels)]
         # registered receive-bucket table: landing offset -> guard id; one
         # per rank (it describes this rank's symmetric memory), shared by
@@ -140,19 +160,22 @@ class Proxy:
         while not self._stop.is_set():
             busy = False
             for ch in my:
-                got = ch.poll()
-                if got is None:
-                    continue
-                idx, cmd = got
+                # _executing is raised BEFORE the bulk pop so the quiesce
+                # condition never sees the batch neither queued nor
+                # mid-execution
                 with self._lock:
                     self._executing += 1
+                words = ch.pop_all()
+                if words is None:
+                    with self._lock:
+                        self._executing -= 1
+                    continue
                 try:
-                    self._execute(cmd)
+                    self._execute_words(words)
                 except BaseException as e:     # surface instead of hanging:
                     if self.error is None:     # the quiesce loop re-raises
                         self.error = e
                 finally:
-                    ch.pop()
                     with self._lock:
                         self._executing -= 1
                 busy = True
@@ -164,7 +187,6 @@ class Proxy:
         mode used by tests/benchmarks without starting worker threads).
         Bulk-pops each channel so the ring's locking is per batch, not per
         command."""
-        unpack = TransferCmd.unpack
         progress = True
         while progress:
             progress = False
@@ -172,9 +194,18 @@ class Proxy:
                 words = ch.pop_all()
                 if words is None:
                     continue
-                for row in words:
-                    self._execute(unpack(row))
+                self._execute_words(words)
                 progress = True
+
+    def _execute_words(self, words: np.ndarray) -> None:
+        """Execute one drained (N, 4) descriptor batch: columnar fast path,
+        or row-by-row through the scalar codec (the conformance oracle)."""
+        if self.columnar:
+            self._execute_batch(words)
+        else:
+            unpack = TransferCmd.unpack
+            for row in words:
+                self._execute(unpack(row))
 
     # ------------------------------------------------------ cmd execution --
     def _next_seq(self, dst: int, channel: int) -> int:
@@ -227,6 +258,174 @@ class Proxy:
                               kind="imm", dst_off=cmd.dst_off, payload=None,
                               imm=imm))
 
+    # ----------------------------------------------- batched cmd execution --
+    def _coalesce_cap(self) -> int:
+        """Longest write run one wire message may carry.  Each sub-write
+        keeps its own sequence number, so under srd a delayed message can
+        now be displaced by up to ``(reorder_window + 1) * cap``
+        *sequences*, not arrivals.  The cap keeps that product inside the
+        receiver's documented SEQ_MOD // 4 displacement bound
+        (semantics.py), which leaves a 2x margin against the true
+        ±SEQ_MOD // 2 unwrap window — cover for seq-carrying messages of
+        mixed wire sizes (zero-payload SEQ_ATOMICs are denser per wire
+        byte than coalesced data runs).  rc delivers per-link in order
+        (no displacement) — the cap there is payload-assembly sanity."""
+        cfg = self.net.cfg
+        if cfg.mode == "srd":
+            return max(1, (SEQ_MOD // 4) // (cfg.reorder_window + 1))
+        return 256
+
+    def _execute_batch(self, words: np.ndarray) -> None:
+        """Columnar consumer fast path: decode a drained (N, 4) descriptor
+        batch with vectorized bit-ops, assign per-(dst, channel) sequence
+        numbers in bulk, coalesce contiguous write runs into single wire
+        messages, and issue the whole batch through ``Network.send_batch``
+        under one lock.  Field-for-field equivalent to N scalar
+        :meth:`_execute` calls (the fuzz harness holds it to that oracle);
+        with coalescing off the message stream is bit-identical."""
+        n = len(words)
+        if n == 0:
+            return
+        cols = unpack_cmds(words)
+        op, ch, dst = cols.op, cols.channel, cols.dst_rank
+        src_off, dst_off, length = cols.src_off, cols.dst_off, cols.length
+        is_w = (op == Op.WRITE) | (op == Op.WRITE_ATOMIC)
+        is_wa = op == Op.WRITE_ATOMIC
+        is_at = op == Op.ATOMIC
+        handled = is_w | is_at | (op == Op.DRAIN)
+        if not handled.all():
+            bad = int(op[~handled][0])
+            bad = _OP_OF.get(bad, bad)
+            raise ValueError(f"unhandled op {bad!r}")
+        self.stats["cmds"] += n
+        self.stats["writes"] += int(is_w.sum())
+        self.stats["atomics"] += int((is_at | is_wa).sum())
+        fenced = (cols.flags & FLAG_FENCE) != 0
+        is_fat = is_at & fenced                # LL completion fences
+        is_sat = is_at & ~fenced               # HT seq atomics
+        sends_imm = is_w | is_at
+        assert not sends_imm.any() or int(ch[sends_imm].max()) < \
+            N_CHANNELS_MAX, "imm codec carries 3 channel bits"
+
+        # ---- bulk sequence assignment (order within each (dst, channel)
+        # key is the descriptor order, exactly as N _next_seq calls) -------
+        seq = np.zeros(n, np.int64)
+        m_seq = is_w | is_sat
+        if m_seq.any():
+            rows = np.flatnonzero(m_seq)
+            key = (dst[rows] << 8) | ch[rows]
+            order = np.argsort(key, kind="stable")
+            ks = key[order]
+            nk = len(ks)
+            brk = np.empty(nk, bool)
+            brk[0] = True
+            np.not_equal(ks[1:], ks[:-1], out=brk[1:])
+            starts = np.flatnonzero(brk)
+            reps = np.diff(np.append(starts, nk))
+            base = np.empty(len(starts), np.int64)
+            for j, s in enumerate(starts.tolist()):
+                k = (int(ks[s]) >> 8, int(ks[s]) & 0xFF)
+                base[j] = self._seq.get(k, 0)
+                self._seq[k] = int(base[j]) + int(reps[j])
+            full = np.repeat(base, reps) + \
+                (np.arange(nk) - np.repeat(starts, reps))
+            sw = np.empty(nk, np.int64)
+            sw[order] = full % SEQ_MOD
+            seq[rows] = sw
+
+        # ---- vectorized immediates (same per-kind layout as pack_imm) ----
+        imm = np.zeros(n, np.int64)
+        imm[is_w] = (ch[is_w] << 2) | (seq[is_w] << 5)      # ImmKind.WRITE
+        if is_fat.any():
+            cnt = src_off[is_fat]              # 32-bit atomic operand field
+            assert int(cnt.max()) <= FENCE_COUNT_MAX, int(cnt.max())
+            imm[is_fat] = int(ImmKind.FENCE_ATOMIC) | (ch[is_fat] << 2) | \
+                (cnt << 5)
+        if is_sat.any():
+            val = src_off[is_sat]
+            assert int(val.max()) <= IMM_VAL_MAX, int(val.max())
+            imm[is_sat] = int(ImmKind.SEQ_ATOMIC) | (ch[is_sat] << 2) | \
+                (seq[is_sat] << 5) | (val << 16)
+
+        # ---- coalescing: maximal runs of writes to one (dst, channel)
+        # whose landing ranges are contiguous, split at the srd seq-
+        # displacement cap ---------------------------------------------------
+        if self.coalesce and n > 1:
+            cont = np.zeros(n, bool)
+            cont[1:] = (is_w[1:] & is_w[:-1] & (dst[1:] == dst[:-1])
+                        & (ch[1:] == ch[:-1])
+                        & (dst_off[1:] == dst_off[:-1] + length[:-1]))
+            run_start = np.cumsum(~cont) - 1        # raw run id per row
+            pos = np.arange(n) - \
+                np.flatnonzero(~cont)[run_start]    # position within run
+            cont &= (pos % self._coalesce_cap()) != 0
+            seg_starts = np.flatnonzero(~cont)
+            # payload-assembly prefix sums: a run [a, b) has contiguous
+            # sources iff spref[b-1] == spref[a], and uniform lengths iff
+            # lpref[b-1] == lpref[a] — O(1) per segment in the build loop
+            sbrk = np.ones(n, np.int64)
+            sbrk[1:] = src_off[1:] != src_off[:-1] + length[:-1]
+            spref = np.cumsum(sbrk).tolist()
+            lbrk = np.ones(n, np.int64)
+            lbrk[1:] = length[1:] != length[:-1]
+            lpref = np.cumsum(lbrk).tolist()
+        else:
+            seg_starts = np.arange(n)
+            spref = lpref = None
+        seg_ends = np.append(seg_starts[1:], n)
+
+        # ---- build the wire-message batch in descriptor order ------------
+        # (columns drop to python lists here: the loop below touches every
+        # field once per segment, and list indexing beats np scalar boxing)
+        mem = self.mem.data
+        rank = self.rank
+        wa_rows = set(np.flatnonzero(is_wa).tolist()) if is_wa.any() else ()
+        w_l, at_l = is_w.tolist(), is_at.tolist()
+        dst_l, ch_l, imm_l = dst.tolist(), ch.tolist(), imm.tolist()
+        src_l, off_l, len_l = src_off.tolist(), dst_off.tolist(), \
+            length.tolist()
+        msgs: list[Message] = []
+        for a, b in zip(seg_starts.tolist(), seg_ends.tolist()):
+            if w_l[a]:
+                if b - a == 1:
+                    s = src_l[a]
+                    msgs.append(Message(         # positional: hot loop
+                        rank, dst_l[a], ch_l[a], "write", off_l[a],
+                        mem[s:s + len_l[a]].copy(), imm_l[a]))
+                else:
+                    # run total bytes = dst span (the run is dst-contiguous
+                    # by construction)
+                    total = off_l[b - 1] + len_l[b - 1] - off_l[a]
+                    if spref[b - 1] == spref[a]:    # contiguous sources
+                        payload = mem[src_l[a]:src_l[a] + total].copy()
+                    elif lpref[b - 1] == lpref[a]:  # uniform lengths
+                        payload = mem[src_off[a:b, None]
+                                      + np.arange(len_l[a])].reshape(-1)
+                    else:
+                        payload = np.concatenate(
+                            [mem[src_l[r]:src_l[r] + len_l[r]]
+                             for r in range(a, b)])
+                    msgs.append(Message(
+                        rank, dst_l[a], ch_l[a], "write", off_l[a],
+                        payload, None, imm_vec=imm[a:b].astype(np.uint32),
+                        sub_off=dst_off[a:b].copy()))
+                # piggybacked completion atomics ride behind their writes
+                for r in (range(a, b) if wa_rows else ()):
+                    if r in wa_rows:
+                        opd = src_l[r]
+                        assert opd <= FENCE_COUNT_MAX, opd
+                        msgs.append(Message(
+                            rank, dst_l[r], qp=ch_l[r], kind="imm",
+                            dst_off=off_l[r], payload=None,
+                            imm=pack_imm(ImmKind.FENCE_ATOMIC, ch_l[r], 0,
+                                         opd)))
+            elif at_l[a]:
+                msgs.append(Message(rank, dst_l[a], qp=ch_l[a], kind="imm",
+                                    dst_off=off_l[a], payload=None,
+                                    imm=imm_l[a]))
+            # DRAIN: scheduling hint, nothing to issue
+        self.net.send_batch(msgs)
+
     # ---------------------------------------------------------- receiver --
     def _ctrl_for(self, src: int) -> ControlBuffer:
         if src not in self.ctrl:
@@ -236,6 +435,17 @@ class Proxy:
     def _on_deliver(self, msg: Message):
         cb = self._ctrl_for(msg.src)
         if msg.kind == "write":
+            if msg.imm_vec is not None:
+                # coalesced run: the landing range is contiguous by
+                # construction, so the whole payload is ONE copy; guard
+                # resolution and sequence bookkeeping run vectorized over
+                # the unrolled immediate vector
+                self.mem.data[msg.dst_off:msg.dst_off + msg.payload.size] = \
+                    msg.payload
+                cb.on_write_batch(msg.imm_vec, msg.sub_off)
+                self.stats["held_max"] = max(self.stats["held_max"],
+                                             cb.n_held)
+                return
             # writes apply immediately under ordered AND unordered
             # transports (one-sided placements at distinct offsets are
             # order-independent); only atomics need receiver-side guards —

@@ -42,8 +42,11 @@ transfer has no landing address to resolve), and the SEQ_ATOMIC operand
 (HT chunk id) rides the 16-bit value field.  Wire sequences are modulo
 ``SEQ_MOD``; the receiver unwraps them against the highest sequence seen per
 channel, which is safe while delivery displacement stays below
-``SEQ_MOD // 4`` arrivals (the network model bounds its reorder window
-accordingly).
+``SEQ_MOD // 4`` *sequences* (half the true unwrap window, margin for
+mixed wire sizes).  Two senders together keep it there: the network model
+bounds its reorder window below 512 arrivals, and the proxy's write
+coalescer caps run length so ``(reorder_window + 1) * cap`` sequences
+stay inside the same bound (``Proxy._coalesce_cap``).
 """
 from __future__ import annotations
 
@@ -105,12 +108,13 @@ class GuardTable:
     such writes apply but can never satisfy a completion fence.
     """
 
-    __slots__ = ("_bases", "_ends", "_gids")
+    __slots__ = ("_bases", "_ends", "_gids", "_np")
 
     def __init__(self):
         self._bases: list[int] = []
         self._ends: list[int] = []
         self._gids: list[int] = []
+        self._np = None              # cached array form for resolve_batch
 
     def __len__(self) -> int:
         return len(self._bases)
@@ -127,6 +131,7 @@ class GuardTable:
         self._bases.insert(i, base)
         self._ends.insert(i, base + extent)
         self._gids.insert(i, int(guard_id))
+        self._np = None
 
     def register_table(self, bases, extents, guard_ids) -> None:
         """Bulk registration of a bucket table; arguments broadcast."""
@@ -143,6 +148,29 @@ class GuardTable:
         if i >= 0 and off < self._ends[i]:
             return self._gids[i]
         return None
+
+    def resolve_batch(self, offs) -> np.ndarray:
+        """Vectorized :meth:`resolve`: (N,) offsets -> (N,) int64 guard ids,
+        -1 where the offset lands in unregistered memory.  One searchsorted
+        over the (cached) sorted range table for the whole batch."""
+        offs = np.asarray(offs, np.int64)
+        if not self._bases:
+            return np.full(offs.shape, -1, np.int64)
+        if self._np is None:
+            self._np = (np.asarray(self._bases, np.int64),
+                        np.asarray(self._ends, np.int64),
+                        np.asarray(self._gids, np.int64))
+        bases, ends, gids = self._np
+        i = np.searchsorted(bases, offs, side="right") - 1
+        j = np.maximum(i, 0)
+        ok = (i >= 0) & (offs < ends[j])
+        return np.where(ok, gids[j], -1)
+
+
+def _noop() -> None:
+    """Stand-in apply for batch unrolling: a coalesced run's payload is
+    landed by the receiver in one contiguous copy before the semantics
+    bookkeeping runs, so the per-write apply has nothing left to do."""
 
 
 @dataclass(order=True)
@@ -169,7 +197,10 @@ class ControlBuffer:
         self.writes_seen: dict[int, int] = {}
         self.next_seq = [0] * n_channels
         self._hi_seq = [0] * n_channels        # unwrap anchor per channel
-        self._arrived: dict[int, list[int]] = {}   # per-channel seq min-heaps
+        # per-channel min-heaps of [start, end) arrived-sequence intervals:
+        # a coalesced run buffers as ONE interval, not n entries, so the
+        # heap stays O(messages) rather than O(sequences)
+        self._arrived: dict[int, list[tuple[int, int]]] = {}
         self.held_seq: dict[int, list[_Held]] = {}
         # guard id -> [(required count, imm, apply)]
         self.held_fence: dict[int, list[tuple[int, int, Callable]]] = {}
@@ -194,6 +225,75 @@ class ControlBuffer:
             if gid is not None:
                 self._drain_fences(gid)
             self._drain(ch)
+
+    def on_write_batch(self, imms: np.ndarray, dst_offs: np.ndarray) -> None:
+        """Batched :meth:`on_write` for a coalesced delivery.  The payload
+        is already in place (the caller lands a coalesced run with ONE
+        contiguous copy); this attributes every sub-write to its guard with
+        one ``searchsorted`` over the registered range table and advances
+        the channel's sequence prefix in bulk.
+
+        The vectorized path requires that no held guarded atomic can fire
+        mid-run — a held fence on one of the run's own guards, or a held
+        seq atomic on the run's channel.  Those cases (out-of-order srd
+        stragglers racing their guard) unroll through the scalar
+        :meth:`on_write`, which stays the semantics oracle (identical
+        apply ordering); held atomics on unrelated guards/channels can't
+        observe the run and don't force the fallback."""
+        imms = np.asarray(imms, np.uint32)
+        n = len(imms)
+        if n == 0:
+            return
+        ch = int(imms[0]) >> 2 & 0x7
+        dst_offs = np.asarray(dst_offs)
+        # guard attribution: a proxy-coalesced run lands in one ascending
+        # contiguous interval, so when its offsets are monotone and the
+        # first and last resolve to the same bucket, the whole run is
+        # inside it (registered ranges are intervals) — two bisect probes
+        # plus one comparison, no searchsorted.  Anything else (the API
+        # accepts arbitrary offset batches) takes the vectorized resolve.
+        uniq = cnt = None
+        if self.guards is not None:
+            g0 = self.guards.resolve(int(dst_offs[0]))
+            if g0 is not None and \
+                    self.guards.resolve(int(dst_offs[-1])) == g0 and \
+                    bool((dst_offs[1:] >= dst_offs[:-1]).all()):
+                uniq, cnt = [g0], [n]
+            else:
+                gids = self.guards.resolve_batch(dst_offs)
+                reg = gids[gids >= 0]
+                if len(reg):
+                    u, c = np.unique(reg, return_counts=True)
+                    uniq, cnt = u.tolist(), c.tolist()
+        hf = self.held_fence
+        if self.held_seq.get(ch) or (
+                hf and uniq is not None and any(g in hf for g in uniq)):
+            for i in range(n):                 # scalar oracle path
+                self.on_write(int(imms[i]), _noop, int(dst_offs[i]))
+            return
+        if uniq is not None:
+            seen = self.writes_seen
+            for g, c in zip(uniq, cnt):
+                seen[g] = seen.get(g, 0) + c
+        # the sender assigns a coalesced run consecutive sequences
+        # [full0, full0 + n), so the prefix state advances in bulk
+        full0 = self._unwrap(ch, (int(imms[0]) >> 5) & 0x7FF)
+        if full0 + n - 1 > self._hi_seq[ch]:
+            self._hi_seq[ch] = full0 + n - 1
+        if full0 == self.next_seq[ch]:
+            # in-order run: extends the contiguous prefix at once (no held
+            # seq atomic on this channel — checked above — so closing more
+            # of the prefix releases nothing)
+            self.next_seq[ch] = full0 + n
+            h = self._arrived.get(ch)
+            while h and h[0][0] == self.next_seq[ch]:
+                self.next_seq[ch] = heapq.heappop(h)[1]
+        else:
+            # out-of-order srd straggler-side run: buffer the whole run as
+            # ONE [start, end) interval (nothing can pop yet — the prefix
+            # below full0 is still open)
+            self._bump_seq(ch, full0, full0 + n)
+        self.applied_log.extend(imms.tolist())
 
     def on_atomic(self, imm: int, apply: Callable[[], None],
                   guard: Optional[int] = None) -> None:
@@ -240,16 +340,17 @@ class ControlBuffer:
             self._hi_seq[ch] = full
         return full
 
-    def _bump_seq(self, ch: int, seq: int) -> None:
+    def _bump_seq(self, ch: int, seq: int, end: Optional[int] = None) -> None:
         # sequences are assigned consecutively per channel by the sender;
         # next_seq advances over the contiguous prefix of *applied* seqs
         # (writes may land out of order and apply immediately, so arrivals
-        # are buffered in a heap until the prefix closes).
-        heapq.heappush(self._arrived.setdefault(ch, []), seq)
+        # are buffered — as [start, end) intervals — until the prefix
+        # closes).
+        heapq.heappush(self._arrived.setdefault(ch, []),
+                       (seq, seq + 1 if end is None else end))
         h = self._arrived[ch]
-        while h and h[0] == self.next_seq[ch]:
-            heapq.heappop(h)
-            self.next_seq[ch] += 1
+        while h and h[0][0] == self.next_seq[ch]:
+            self.next_seq[ch] = heapq.heappop(h)[1]
 
     def _drain(self, ch: int) -> None:
         heap = self.held_seq.get(ch)

@@ -37,7 +37,7 @@ from typing import Callable, Optional
 import numpy as np
 
 
-@dataclass
+@dataclass(slots=True)
 class Message:
     src: int
     dst: int
@@ -49,6 +49,18 @@ class Message:
     inject_t: float = 0.0
     deliver_t: float = 0.0
     size: int = 0
+    # coalesced RDMA write (proxy write coalescing): one wire message
+    # carrying N contiguous sub-writes.  ``imm_vec`` holds each sub-write's
+    # 32-bit immediate (srd ordering emulation still sees one immediate per
+    # fenced write), ``sub_off`` each sub-write's landing offset — the
+    # receiver unrolls both against its guard table in one vectorized pass.
+    imm_vec: Optional[np.ndarray] = None
+    sub_off: Optional[np.ndarray] = None
+
+    @property
+    def n_writes(self) -> int:
+        """Sub-writes this wire message carries (1 unless coalesced)."""
+        return 1 if self.imm_vec is None else len(self.imm_vec)
 
 
 @dataclass
@@ -86,9 +98,12 @@ class Network:
         # every send/step pays two lock ops otherwise
         self._lock = threading.Lock() if threadsafe else None
         self._srd = cfg.mode == "srd"
-        self._jit: list[int] = []             # batched reorder-jitter draws
+        self._jit = np.empty(0, np.int64)     # batched reorder-jitter draws
+        self._jit_pos = 0                     # cursor into the draw buffer
         self.delivered = 0
         self.bytes_moved = 0
+        self.coalesced_msgs = 0       # delivered messages carrying >1 write
+        self.coalesced_writes = 0     # sub-writes delivered inside those
         self.clock_us = 0.0
         self.on_deliver_hook: Optional[Callable[[Message], None]] = None
 
@@ -96,11 +111,23 @@ class Network:
         self.receivers[rank] = on_deliver
 
     # ------------------------------------------------------------- sending --
+    def _jitter_batch(self, n: int) -> np.ndarray:
+        """Next ``n`` seeded reorder draws, in draw order (a cursor into a
+        replenished buffer — scalar and batched sends consume the identical
+        stream, so a non-coalescing batched sender schedules bit-identically
+        to a scalar one)."""
+        end = self._jit_pos + n
+        if end > len(self._jit):
+            fresh = self.rng.integers(0, self.cfg.reorder_window + 1,
+                                      size=max(4096, n))
+            self._jit = np.concatenate([self._jit[self._jit_pos:], fresh])
+            self._jit_pos, end = 0, n
+        out = self._jit[self._jit_pos:end]
+        self._jit_pos = end
+        return out
+
     def _jitter(self) -> int:
-        if not self._jit:
-            self._jit = self.rng.integers(
-                0, self.cfg.reorder_window + 1, size=4096).tolist()
-        return self._jit.pop()
+        return int(self._jitter_batch(1)[0])
 
     def _schedule(self, msg: Message):
         msg.size = 0 if msg.payload is None else msg.payload.nbytes
@@ -126,6 +153,80 @@ class Network:
         else:
             with self._lock:
                 self._schedule(msg)
+
+    def _schedule_batch(self, msgs: list) -> None:
+        """Vectorized :meth:`_schedule` for a whole batch under one lock:
+        per-link serialization via a grouped cumulative sum, one batched
+        jitter draw, and a bulk heap extension (heapify beats N pushes once
+        the batch stops being small relative to the heap)."""
+        cfg = self.cfg
+        n = len(msgs)
+        if n < 8:          # vectorization overhead beats tiny batches
+            for m in msgs:
+                self._schedule(m)
+            return
+        clock = self.clock_us
+        nr = self.n_ranks
+        sz = [0] * n
+        ky = [0] * n
+        for i, m in enumerate(msgs):
+            if m.payload is not None:
+                sz[i] = m.payload.nbytes
+            m.size = sz[i]
+            m.inject_t = clock
+            ky[i] = m.src * nr + m.dst
+        sizes = np.asarray(sz, np.int64)
+        key = np.asarray(ky, np.int64)
+        tx = (sizes + cfg.hdr_bytes) / cfg.bw_bytes_per_us
+        order = np.argsort(key, kind="stable")
+        ko, txo = key[order], tx[order]
+        brk = np.empty(n, bool)
+        brk[0] = True
+        np.not_equal(ko[1:], ko[:-1], out=brk[1:])
+        starts = np.flatnonzero(brk)
+        reps = np.diff(np.append(starts, n))
+        # per-link serialization: message i on a link starts when the
+        # previous one finishes.  cumsum seeded with the link-free base is
+        # the exact scalar recurrence (np.add.accumulate is sequential), so
+        # batched scheduling is bit-identical to N _schedule calls.
+        finish = np.empty(n)
+        for j, s in enumerate(starts.tolist()):
+            cnt = int(reps[j])
+            m = msgs[int(order[s])]
+            free = self._link_free.get((m.src, m.dst), 0.0)
+            seg = txo[s:s + cnt].copy()
+            seg[0] += free if free > self.clock_us else self.clock_us
+            fin = np.cumsum(seg)
+            finish[s:s + cnt] = fin
+            self._link_free[(m.src, m.dst)] = float(fin[-1])
+        arrival = np.empty(n)
+        arrival[order] = finish + cfg.base_latency_us
+        if self._srd:
+            arrival += self._jitter_batch(n) * tx
+        arr = arrival.tolist()          # one C conversion, not n boxings
+        seq0 = self._order
+        entries = [(arr[i], seq0 + 1 + i, m) for i, m in enumerate(msgs)]
+        for i, m in enumerate(msgs):
+            m.deliver_t = arr[i]
+        self._order = seq0 + n
+        heap = self._heap
+        if n >= max(64, len(heap) // 4):
+            heap.extend(entries)
+            heapq.heapify(heap)
+        else:
+            for e in entries:
+                heapq.heappush(heap, e)
+
+    def send_batch(self, msgs: list) -> None:
+        """Schedule a whole batch of messages in one lock round-trip (the
+        proxy's batched-RDMA issue path)."""
+        if not msgs:
+            return
+        if self._lock is None:
+            self._schedule_batch(msgs)
+        else:
+            with self._lock:
+                self._schedule_batch(msgs)
 
     # ------------------------------------------------------------ delivery --
     @property
@@ -158,8 +259,7 @@ class Network:
             t, _, m = heapq.heappop(heap)
             if t > self.clock_us:
                 self.clock_us = t
-            self.bytes_moved += m.size
-            self.delivered += 1
+            self._account(m)
         finally:
             if lock is not None:
                 lock.release()
@@ -168,6 +268,43 @@ class Network:
         if self.on_deliver_hook is not None:
             self.on_deliver_hook(m)
         return True
+
+    def _account(self, m: Message) -> None:
+        # caller holds the lock (threadsafe mode)
+        self.bytes_moved += m.size
+        self.delivered += 1
+        if m.imm_vec is not None and len(m.imm_vec) > 1:
+            self.coalesced_msgs += 1
+            self.coalesced_writes += len(m.imm_vec)
+
+    def deliver_ready(self) -> int:
+        """Deliver every event sharing the frontier timestamp in ONE lock
+        round-trip (the batched half of :meth:`step`).  Returns the number
+        of messages delivered (0 when nothing is in flight)."""
+        lock = self._lock
+        if lock is not None:
+            lock.acquire()
+        try:
+            heap = self._heap
+            if not heap:
+                return 0
+            t0 = heap[0][0]
+            batch = []
+            while heap and heap[0][0] == t0:
+                batch.append(heapq.heappop(heap)[2])
+            if t0 > self.clock_us:
+                self.clock_us = t0
+            for m in batch:
+                self._account(m)
+        finally:
+            if lock is not None:
+                lock.release()
+        hook = self.on_deliver_hook
+        for m in batch:         # deliver OUTSIDE the lock (receivers send)
+            self.receivers[m.dst](m)
+            if hook is not None:
+                hook(m)
+        return len(batch)
 
     def run_until(self, t: float) -> int:
         """Deliver every message scheduled at or before ``t``."""

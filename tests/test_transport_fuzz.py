@@ -1,4 +1,5 @@
-"""Transport-semantics conformance fuzz harness (ISSUE 4 tentpole).
+"""Transport-semantics conformance fuzz harness (ISSUE 4 tentpole;
+extended by ISSUE 5 with the batched/coalesced-path oracle agreement).
 
 Drives randomized command streams through the delivery-semantics layer and
 the full EP substrate, asserting the invariants the paper's §3.3/§4.1
@@ -22,6 +23,19 @@ the regime the seed's 6-bit slot codec could not represent (DeepSeek-V3:
 deterministic seeded sweep (always on, pinned repro seeds) and as a
 hypothesis property with shrinking when hypothesis is installed (the
 conftest stub skips those cleanly otherwise).
+
+The columnar fast path (ISSUE 5) is held to the scalar path as its
+conformance oracle at two levels.  ControlBuffer level: the same stream of
+wire messages (including coalesced runs carrying immediate vectors) is
+delivered once through per-write ``on_write`` and once through
+``on_write_batch``, asserting an IDENTICAL apply log — the batched
+receiver may not reorder a single fence fire.  EP level: every randomized
+world runs {scalar, columnar, columnar+coalesced}; scalar vs columnar
+must agree on everything bit-for-bit including the per-peer apply logs
+(their wire schedules are identical); coalescing changes the wire-message
+boundaries, so there the assertions are bit-identical symmetric memories
+and outputs, apply-log *multiset* equality per peer, strictly-not-more
+delivered messages, and clean quiesce.
 """
 import numpy as np
 import pytest
@@ -281,3 +295,187 @@ def test_ep_conformance_property(seed, mode, proto, eps):
     """Hypothesis form of the matrix sweep: randomized routing/topology
     with shrinking toward a minimal failing (seed, mode, proto, eps)."""
     _run_ep_case(mode, proto, eps, threaded=False, seed=seed)
+
+
+# ======================================================================
+# Part 3: batched/coalesced fast path vs the scalar oracle (ISSUE 5)
+# ======================================================================
+def _batched_wire_stream(rng, guards, events):
+    """Turn a sent event stream into wire messages the way the columnar
+    proxy does: runs of consecutive same-channel writes (random run
+    lengths) coalesce into one message carrying an immediate vector; every
+    other event is its own message.  Returns a list of
+    ('w', [(imm, off), ...]) / ('s', imm) / ('f', imm, gid) messages."""
+    msgs, run = [], []
+    for ev in events:
+        if ev[0] == "w":
+            _, imm, off, ch, _ = ev
+            if run and (run[0][2] != ch or len(run) >= run[0][3]):
+                msgs.append(("w", [(i, o) for i, o, _, _ in run]))
+                run = []
+            run.append((imm, off, ch, int(rng.integers(1, 8))))
+        else:
+            if run:
+                msgs.append(("w", [(i, o) for i, o, _, _ in run]))
+                run = []
+            msgs.append(ev[:1] + ev[1:])
+    if run:
+        msgs.append(("w", [(i, o) for i, o, _, _ in run]))
+    return msgs
+
+
+def _deliver_msgs(guards, msgs, perm, batched):
+    """Deliver wire messages in ``perm`` order through a ControlBuffer;
+    coalesced write messages go through on_write_batch when ``batched``
+    else unroll write-by-write (the scalar oracle).  Returns the buffer."""
+    cb = ControlBuffer(guards=guards)
+    for i in perm:
+        m = msgs[i]
+        if m[0] == "w":
+            subs = m[1]
+            if batched and len(subs) > 1:
+                cb.on_write_batch(np.array([imm for imm, _ in subs],
+                                           np.uint32),
+                                  np.array([off for _, off in subs],
+                                           np.int64))
+            else:
+                for imm, off in subs:
+                    cb.on_write(imm, lambda: None, off)
+        elif m[0] == "s":
+            cb.on_atomic(m[1], lambda: None)
+        else:
+            cb.on_atomic(m[1], lambda: None, guard=m[2])
+    return cb
+
+
+def _cb_batched_case(seed):
+    """The batched receiver must produce the IDENTICAL apply log, guard
+    counters, and quiesce state as the scalar unroll of the same wire
+    messages in the same delivery order — including the scalar-fallback
+    corners (held fences on a run's own guards, held seq atomics on its
+    channel, straggler runs)."""
+    rng = np.random.default_rng(seed)
+    guards, events = _gen_stream(rng)
+    msgs = _batched_wire_stream(rng, guards, events)
+    perm = rng.permutation(len(msgs))
+    a = _deliver_msgs(guards, msgs, perm, batched=False)
+    b = _deliver_msgs(guards, msgs, perm, batched=True)
+    assert a.applied_log == b.applied_log       # exact fence-fire ordering
+    assert a.writes_seen == b.writes_seen
+    assert a.next_seq == b.next_seq
+    assert b.n_held == a.n_held == 0
+    assert all(not h for h in b._arrived.values())
+
+
+@pytest.mark.parametrize("seed", range(60))
+def test_control_buffer_batched_oracle_seeded(seed):
+    _cb_batched_case(seed)
+
+
+@settings(max_examples=100, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1))
+def test_control_buffer_batched_oracle_property(seed):
+    _cb_batched_case(seed)
+
+
+def _ep_world_ab(mode, proto, eps, seed, columnar, coalesce, threaded):
+    """One EP run with the given drain configuration; returns
+    (out, mems, per-peer apply logs, delivered count, world)."""
+    rng = np.random.default_rng(seed)
+    R = 2
+    E = eps * R
+    K = int(rng.integers(1, 4))
+    D = F = 8
+    Tl = int(rng.integers(4, 9))
+    window = int(rng.choice([1, 16, 128]))
+    x = rng.standard_normal((R, Tl, D)).astype(np.float32)
+    ti = rng.integers(0, E, size=(R, Tl, K)).astype(np.int32)
+    tw = rng.random((R, Tl, K)).astype(np.float32)
+    tw /= tw.sum(-1, keepdims=True)
+    wg = (rng.standard_normal((E, D, F)) * 0.2).astype(np.float32)
+    wu = (rng.standard_normal((E, D, F)) * 0.2).astype(np.float32)
+    wd = (rng.standard_normal((E, F, D)) * 0.2).astype(np.float32)
+    w = EPWorld(n_ranks=R, n_experts=E, top_k=K, d=D, f=F, capacity=Tl * K,
+                net_cfg=NetConfig(mode=mode, seed=seed,
+                                  reorder_window=window),
+                use_threads=threaded, n_threads=2,
+                columnar=columnar, coalesce=coalesce)
+    try:
+        if proto == "ll":
+            out = w.run(x, ti, tw, wg, wu, wd)
+        else:
+            out = w.run_ht(x, ti, tw, wg, wu, wd,
+                           n_chunks=int(rng.integers(1, 5)))
+    finally:
+        if threaded:
+            for p in w.proxies:
+                p.stop()
+    mems = [p.mem.data.copy() for p in w.proxies]
+    logs = {(p.rank, src): tuple(cb.applied_log)
+            for p in w.proxies for src, cb in sorted(p.ctrl.items())}
+    return out, mems, logs, w.net.delivered, w
+
+
+def _quiesce_clean(w):
+    assert w.net.pending == 0
+    for p in w.proxies:
+        assert p.error is None and not p.busy
+        for cb in p.ctrl.values():
+            assert cb.n_held == 0
+            assert all(not h for h in cb._arrived.values())
+
+
+def _ep_batched_oracle_case(mode, proto, eps, seed, threaded=False):
+    o_s, m_s, l_s, d_s, w_s = _ep_world_ab(
+        mode, proto, eps, seed, columnar=False, coalesce=False,
+        threaded=False)
+    o_c, m_c, l_c, d_c, w_c = _ep_world_ab(
+        mode, proto, eps, seed, columnar=True, coalesce=False,
+        threaded=False)
+    # columnar drain without coalescing issues the identical wire schedule:
+    # bit-identical receive buffers, apply logs, and delivery counts
+    np.testing.assert_array_equal(o_s, o_c)
+    assert d_s == d_c
+    assert l_s == l_c, "columnar drain reordered an apply"
+    for a, b in zip(m_s, m_c):
+        np.testing.assert_array_equal(a, b)
+    _quiesce_clean(w_c)
+    # coalescing changes wire-message boundaries (never content): buffers
+    # and outputs stay bit-identical, each peer's applies are the same
+    # multiset, and strictly no more messages are delivered
+    o_z, m_z, l_z, d_z, w_z = _ep_world_ab(
+        mode, proto, eps, seed, columnar=True, coalesce=True,
+        threaded=threaded)
+    np.testing.assert_array_equal(o_s, o_z)
+    for a, b in zip(m_s, m_z):
+        np.testing.assert_array_equal(a, b)
+    assert d_z <= d_s
+    assert set(l_z) == set(l_s)
+    for k in l_s:
+        assert sorted(l_z[k]) == sorted(l_s[k]), k
+    _quiesce_clean(w_z)
+
+
+@pytest.mark.parametrize("mode", ["rc", "srd"])
+@pytest.mark.parametrize("eps", [1, 63, 64])
+def test_ep_batched_oracle_seeded(mode, eps):
+    for proto in ("ll", "ht"):
+        for seed in (0, 3):
+            _ep_batched_oracle_case(mode, proto, eps, seed)
+
+
+@pytest.mark.parametrize("proto", ["ll", "ht"])
+def test_ep_batched_oracle_threaded(proto):
+    """Threaded drains batch nondeterministically (worker pop_all timing),
+    so coalescing boundaries differ run to run — the buffers, outputs, and
+    apply multisets must not."""
+    _ep_batched_oracle_case("srd", proto, 64, seed=5, threaded=True)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1),
+       mode=st.sampled_from(["rc", "srd"]),
+       proto=st.sampled_from(["ll", "ht"]),
+       eps=st.sampled_from(EPS_GRID))
+def test_ep_batched_oracle_property(seed, mode, proto, eps):
+    _ep_batched_oracle_case(mode, proto, eps, seed)
