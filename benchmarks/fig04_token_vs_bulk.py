@@ -33,10 +33,13 @@ def model_latency_us(n_tokens, mode, *, k=6, n_ranks=8, tok_bytes=7168,
     return lat + bytes_total / (bw * n_ranks) + 0.02 * n_msgs / n_ranks
 
 
-def measured_substrate_us(n_tokens: int, protocol: str) -> float:
+def measured_substrate_us(n_tokens: int, protocol: str,
+                          wire_dtype: str = "fp32") -> tuple[float, int]:
     """Measured (not modeled) completion time on the event-clock substrate:
     the LL one-shot protocol vs the HT chunked/dedup'd protocol, same
-    routing table (the 'HT column' companion to the analytic rows)."""
+    routing table (the 'HT column' companion to the analytic rows).
+    Returns (event-clock us, dispatch payload bytes) so the compression
+    column can report the honest byte reduction next to the time."""
     from benchmarks.common import make_ep_problem
     from repro.core.transport import EPWorld, NetConfig
 
@@ -44,12 +47,12 @@ def measured_substrate_us(n_tokens: int, protocol: str) -> float:
     Tl = n_tokens // R
     x, ti, tw, wg, wu, wd = make_ep_problem(0, R, E, K, D, F, Tl)
     w = EPWorld(n_ranks=R, n_experts=E, top_k=K, d=D, f=F, capacity=Tl * K,
-                net_cfg=NetConfig(mode="srd", seed=0))
+                net_cfg=NetConfig(mode="srd", seed=0), wire_dtype=wire_dtype)
     if protocol == "ht":
         w.run_ht(x, ti, tw, wg, wu, wd, n_chunks=max(1, min(4, Tl)))
     else:
         w.run(x, ti, tw, wg, wu, wd)
-    return w.net.clock_us
+    return w.net.clock_us, w.timeline["dispatch_payload_bytes"]
 
 
 def main():
@@ -60,12 +63,17 @@ def main():
              f"speedup_vs_bulk={t_bulk / t_tok:.2f}x")
         emit(f"fig04_token_vs_bulk/bulk/tokens={n}", t_bulk, "")
     for n in (256, 1024):
-        t_ll = measured_substrate_us(n, "ll")
-        t_ht = measured_substrate_us(n, "ht")
+        t_ll, b_ll = measured_substrate_us(n, "ll")
+        t_ht, _ = measured_substrate_us(n, "ht")
         emit(f"fig04_token_vs_bulk/substrate_ll/tokens={n}", t_ll,
              "event-clock us")
         emit(f"fig04_token_vs_bulk/substrate_ht/tokens={n}", t_ht,
              f"event-clock us;vs_ll={t_ll / t_ht:.2f}x")
+        # compression column: same protocol/routing, fp8 wire payloads
+        t_q, b_q = measured_substrate_us(n, "ll", wire_dtype="fp8")
+        emit(f"fig04_token_vs_bulk/substrate_ll_fp8/tokens={n}", t_q,
+             f"event-clock us;vs_fp32={t_ll / t_q:.2f}x;"
+             f"payload_reduction={b_ll / b_q:.2f}x")
 
 
 if __name__ == "__main__":

@@ -20,10 +20,11 @@ from repro.kernels.ref import grouped_swiglu_ref
 E, K, D, F = 32, 6, 256, 128
 
 
-def build(mesh, axes, mode, n_tokens_global, chunks=1):
+def build(mesh, axes, mode, n_tokens_global, chunks=1, wire_dtype="fp32"):
     sizes = tuple(mesh.shape[a] for a in axes)
     spec = EPSpec(axes=axes, sizes=sizes, n_experts=E, top_k=K,
-                  capacity_factor=2.0, chunks=chunks, dtype=jnp.bfloat16)
+                  capacity_factor=2.0, chunks=chunks, dtype=jnp.bfloat16,
+                  wire_dtype=wire_dtype)
     ep_p = axes if len(axes) > 1 else axes[0]
 
     def island(x, ti, tw, wg, wu, wd, with_aux):
@@ -74,17 +75,23 @@ def build(mesh, axes, mode, n_tokens_global, chunks=1):
     return run
 
 
-def wire_bytes_model(n_tokens, mode, P_ep=8, pods=2):
-    """Modeled inter-shard payload bytes (dispatch+combine), global."""
+def wire_bytes_model(n_tokens, mode, P_ep=8, pods=2, wire_dtype="fp32"):
+    """Modeled inter-shard payload bytes (dispatch+combine), global.
+
+    Compressed wire dtypes shrink the *dispatch* leg to the wire-row size
+    (quantized bytes + inline fp32 scales); the combine leg stays full
+    precision (the fp32-accumulation contract, DESIGN.md §14)."""
+    from repro.core.plan import wire_layout
     tok = D * 2
+    disp = tok if wire_dtype == "fp32" else wire_layout(D, wire_dtype).token_bytes
     if mode == "nccl":
         return n_tokens * tok * (P_ep - 1) * 2          # all-gather + psum
     if mode == "ll":
-        return n_tokens * K * tok * 2                   # per choice, both ways
+        return n_tokens * K * (disp + tok)              # per choice, both ways
     # ht: dedup per shard group + one combined return per (token, group)
     frac = 1.0 - (1.0 - 1.0 / P_ep) ** K
     groups_hit = P_ep * frac
-    return int(n_tokens * groups_hit * tok * 2)
+    return int(n_tokens * groups_hit * (disp + tok))
 
 
 def main():
@@ -103,6 +110,24 @@ def main():
             wb = wire_bytes_model(n, mode)
             emit(f"fig08_dispatch_combine/{mode}/tokens={n}", us,
                  f"wire_bytes={wb},occupancy={occ:.3f},dropped={dropped:.4f}")
+    # compression columns: fp8/int8 wire dispatch on the LL path (the
+    # decode-latency regime compression targets); derived shows the modeled
+    # payload reduction vs the fp32 row alongside the measured time
+    for n in (512, 2048):
+        wb32 = wire_bytes_model(n, "ll")
+        for wdt in ("fp8", "int8"):
+            try:
+                fn = build(mesh, ("model",), "ll", n, wire_dtype=wdt)
+                us = timeit(fn, warmup=2, iters=5)
+                dropped, occ = fn.aux()
+            except Exception as e:  # noqa: BLE001
+                emit(f"fig08_dispatch_combine/ll_{wdt}/tokens={n}",
+                     float("nan"), f"error:{type(e).__name__}")
+                continue
+            wb = wire_bytes_model(n, "ll", wire_dtype=wdt)
+            emit(f"fig08_dispatch_combine/ll_{wdt}/tokens={n}", us,
+                 f"wire_bytes={wb},payload_reduction={wb32 / wb:.2f}x,"
+                 f"occupancy={occ:.3f},dropped={dropped:.4f}")
     # two-level (pod x model) HT: the hierarchical/dedup path (Fig. 12 analog)
     mesh2 = jax.make_mesh((2, 4), ("pod", "model"),
                           axis_types=(AxisType.Auto,) * 2)

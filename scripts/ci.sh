@@ -26,6 +26,35 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
 REPRO_KERNEL_MODE=interpret PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -x -q tests/test_kernel_modes.py
 
+# Compressed-dispatch smoke: the quantize-pack kernel body (interpret mode)
+# stays bit-identical to the numpy codec, and an fp8 LL run on the
+# substrate hits the honest-accounting floor (>=3.5x payload reduction at
+# D=1024 with the event clock improving) — the same invariants the
+# exact-gated bench_transport/counters/compression rows pin.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+import numpy as np
+from benchmarks.bench_transport import bench_compression
+from repro.kernels import ops as kops
+from repro.kernels.quantize_pack import gather_quantize_ref
+import jax.numpy as jnp
+
+x_ext = np.concatenate([np.random.default_rng(0).standard_normal(
+    (9, 200)).astype(np.float32), np.zeros((1, 200), np.float32)])
+src = np.random.default_rng(1).integers(0, 9, 16).astype(np.int32)
+for wdt in ("fp8", "int8"):
+    qr, sr = gather_quantize_ref(x_ext, src, wire_dtype=wdt)
+    qi, si = kops.gather_quantize(jnp.asarray(x_ext), jnp.asarray(src),
+                                  wire_dtype=wdt, mode="interpret")
+    assert (np.ascontiguousarray(qr).view(np.uint8) ==
+            np.ascontiguousarray(np.asarray(qi)).view(np.uint8)).all(), wdt
+    assert (sr == np.asarray(si)).all(), wdt
+worlds = bench_compression()
+p32 = worlds["fp32"].timeline["dispatch_payload_bytes"]
+pq = worlds["fp8"].timeline["dispatch_payload_bytes"]
+assert p32 / pq >= 3.5 and worlds["fp8"].net.clock_us < worlds["fp32"].net.clock_us
+print(f"ci.sh: compressed-dispatch smoke OK ({p32 / pq:.2f}x payload reduction)")
+EOF
+
 # Benchmark smoke: two host benchmarks end-to-end (fig15 FIFO stress +
 # the bench_transport batched-path microbench, whose counter rows are
 # exact-gated), plus the machine-readable results file the perf trajectory

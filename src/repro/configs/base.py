@@ -32,6 +32,9 @@ class MoEConfig:
     # EP transport backend (repro.core.backend registry): "jax_collectives"
     # (XLA a2a path) | "simulated_rdma" (host transport-substrate reference)
     ep_backend: str = "jax_collectives"
+    # dispatch payload wire dtype: "fp32" | "fp8" | "int8" (block-quantized
+    # with inline per-128-feature scales; combines stay fp32 — DESIGN.md §14)
+    wire_dtype: str = "fp32"
 
     @property
     def enabled(self) -> bool:

@@ -144,7 +144,8 @@ class SimulatedRDMABackend:
                         n_channels=self.n_channels,
                         use_threads=self.use_threads,
                         n_threads=self.n_threads,
-                        columnar=self.columnar, coalesce=self.coalesce)
+                        columnar=self.columnar, coalesce=self.coalesce,
+                        wire_dtype=getattr(spec, "wire_dtype", "fp32"))
         xs = x.reshape(R, Tl, D)
         tis = top_idx.reshape(R, Tl, K)
         tws = top_w.reshape(R, Tl, K)

@@ -57,6 +57,12 @@ class EPSpec:
     chunks: int = 1              # HT pipeline chunks
     dtype: jnp.dtype = jnp.bfloat16
     mode: str = "ht"             # "ll" (decode) | "ht" (train/prefill)
+    # dispatch-payload wire dtype: "fp32" (passthrough: tokens cross in
+    # ``dtype``) | "fp8" | "int8" (block-quantized, inline per-128-feature
+    # fp32 scales; dequantized to fp32 at the receiver — DESIGN.md §14).
+    # Compression applies to dispatch only; combine returns and all
+    # accumulation stay full precision.
+    wire_dtype: str = "fp32"
 
     @property
     def degree(self) -> int:
@@ -94,6 +100,57 @@ def _cap(n: float, cf: float, hard_max: int, multiple: int = 8) -> int:
     return max(floor, min(c, hard_max))
 
 
+# ================================================= wire-dtype dispatch ====
+def _wire_qdtype(wire_dtype: str):
+    return jnp.float8_e4m3fn if wire_dtype == "fp8" else jnp.int8
+
+
+def _quantized_a2a(spec: EPSpec, x_ext_f32: Array, src_of_slot: Array,
+                   counts: Optional[Array], axis, P: int) -> Array:
+    """Dispatch payloads cross the wire block-quantized (DESIGN.md §14).
+
+    Fused gather->quantize (kernels.gather_quantize) from the fp32 source,
+    a2a of the quantized bytes plus the inline per-block fp32 scales, then
+    dequantize-on-receive back to fp32.  Empty slots gather the scratch zero
+    row and decode to exact zeros, preserving the ``zero_padded`` contract.
+    fp8 payloads cross bitcast to uint8: the *wire* carries raw bytes, and
+    narrow-float collectives aren't portable across backends.
+    """
+    from repro.kernels import ops as kops
+    n = src_of_slot.shape[0]
+    D = x_ext_f32.shape[1]
+    q, sc = kops.gather_quantize(x_ext_f32, src_of_slot, counts,
+                                 wire_dtype=spec.wire_dtype)
+    nb = sc.shape[1]
+    per = n // P
+    qb = lax.bitcast_convert_type(q, jnp.uint8).reshape(P, per, D)
+    qr = lax.all_to_all(qb, axis, split_axis=0, concat_axis=0, tiled=True)
+    sr = lax.all_to_all(sc.reshape(P, per, nb), axis, split_axis=0,
+                        concat_axis=0, tiled=True)
+    qw = lax.bitcast_convert_type(qr.reshape(n, D),
+                                  _wire_qdtype(spec.wire_dtype))
+    return kops.dequantize_tokens(qw, sr.reshape(n, nb))      # (n, D) fp32
+
+
+def _wire_dispatch_a2a(spec: EPSpec, x: Array, plan: "_GroupPlan", axis,
+                       G: int, C: int) -> Array:
+    """Token-payload a2a for one dedup'd group dispatch, in the wire dtype.
+
+    fp32 passthrough sends ``plan.send_x`` as-is (tokens cross in
+    ``spec.dtype``); compressed modes re-gather from the fp32 source via
+    ``plan.src_of_slot`` so the quantize fuses with the packing gather.
+    Metadata (expert ids, combine weights) always crosses uncompressed.
+    """
+    if spec.wire_dtype == "fp32":
+        return lax.all_to_all(plan.send_x, axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+    D = x.shape[1]
+    xf = jnp.concatenate([x.astype(jnp.float32),
+                          jnp.zeros((1, D), jnp.float32)], axis=0)
+    rows = _quantized_a2a(spec, xf, plan.src_of_slot, None, axis, G)
+    return rows.astype(spec.dtype).reshape(G, C, D)
+
+
 # =========================================================== LL mode ======
 def dispatch_combine_ll(spec: EPSpec, x: Array, top_idx: Array, top_w: Array,
                         expert_fn: Callable[[Array], Array],
@@ -120,14 +177,21 @@ def dispatch_combine_ll(spec: EPSpec, x: Array, top_idx: Array, top_w: Array,
     rows = jnp.arange(T * K, dtype=jnp.int32) // K
     src_of_slot = jnp.full((E * C + 1,), T, jnp.int32).at[slot].set(
         rows, mode="drop")[:-1]
-    x_ext = jnp.concatenate([x.astype(spec.dtype),
-                             jnp.zeros((1, D), spec.dtype)], axis=0)
-    send = x_ext[src_of_slot].reshape(E, C, D)
-
     # a2a over the (flattened) EP axes: expert e lives on flat shard e // eps.
-    send = send.reshape(P, eps * C, D)
-    recv = lax.all_to_all(send, spec.flat_axis(), split_axis=0, concat_axis=0,
-                          tiled=True)                  # (P, eps*C, D)
+    if spec.wire_dtype == "fp32":
+        x_ext = jnp.concatenate([x.astype(spec.dtype),
+                                 jnp.zeros((1, D), spec.dtype)], axis=0)
+        send = x_ext[src_of_slot].reshape(P, eps * C, D)
+        recv = lax.all_to_all(send, spec.flat_axis(), split_axis=0,
+                              concat_axis=0, tiled=True)     # (P, eps*C, D)
+    else:
+        # compressed wire: quantize from the full-precision source (not the
+        # already-narrowed spec.dtype), dequantize to fp32 at the receiver
+        xf_ext = jnp.concatenate([x.astype(jnp.float32),
+                                  jnp.zeros((1, D), jnp.float32)], axis=0)
+        deq = _quantized_a2a(spec, xf_ext, src_of_slot,
+                             jnp.minimum(pl.counts, C), spec.flat_axis(), P)
+        recv = deq.astype(spec.dtype).reshape(P, eps * C, D)
     recv = recv.reshape(P, eps, C, D).transpose(1, 0, 2, 3).reshape(eps, P * C, D)
 
     # occupancy exchange: each source's per-(dest expert) occupied counts —
@@ -315,7 +379,7 @@ def _ht_one_chunk(spec: EPSpec, x: Array, top_idx: Array, top_w: Array,
         C = _cap(T * frac, cf, hard_max=T)
         plan = _dedup_group_dispatch(x, eid_local, top_w, group_of, P, C,
                                      spec.dtype)
-        rx = lax.all_to_all(plan.send_x, spec.axes[0], 0, 0, tiled=True)
+        rx = _wire_dispatch_a2a(spec, x, plan, spec.axes[0], P, C)
         re = lax.all_to_all(plan.send_eid, spec.axes[0], 0, 0, tiled=True)
         rw = lax.all_to_all(plan.send_w, spec.axes[0], 0, 0, tiled=True)
         part, d2, occ = _expert_apply(spec, rx.reshape(P * C, D),
@@ -338,7 +402,7 @@ def _ht_one_chunk(spec: EPSpec, x: Array, top_idx: Array, top_w: Array,
     plan1 = _dedup_group_dispatch(x, eid_in_pod, top_w, pod_of, Po, C1,
                                   spec.dtype)
     # inter-pod a2a (same-rail: inner index unchanged), tokens cross once
-    rx = lax.all_to_all(plan1.send_x, ax_o, 0, 0, tiled=True)   # (Po, C1, D)
+    rx = _wire_dispatch_a2a(spec, x, plan1, ax_o, Po, C1)       # (Po, C1, D)
     re = lax.all_to_all(plan1.send_eid, ax_o, 0, 0, tiled=True)
     rw = lax.all_to_all(plan1.send_w, ax_o, 0, 0, tiled=True)
     N2 = Po * C1
@@ -352,7 +416,7 @@ def _ht_one_chunk(spec: EPSpec, x: Array, top_idx: Array, top_w: Array,
     frac_i = 1.0 - (1.0 - 1.0 / Pi) ** K
     C2 = _cap(N2 * frac_i, cf, hard_max=N2)
     plan2 = _dedup_group_dispatch(x2, eid2, w2, grp2, Pi, C2, spec.dtype)
-    rx2 = lax.all_to_all(plan2.send_x, ax_i, 0, 0, tiled=True)
+    rx2 = _wire_dispatch_a2a(spec, x2, plan2, ax_i, Pi, C2)
     re2 = lax.all_to_all(plan2.send_eid, ax_i, 0, 0, tiled=True)
     rw2 = lax.all_to_all(plan2.send_w, ax_i, 0, 0, tiled=True)
     part, d3, occ = _expert_apply(spec, rx2.reshape(Pi * C2, D),

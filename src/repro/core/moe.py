@@ -83,7 +83,8 @@ def make_ep_spec(cfg: ModelConfig, dist: DistCtx, *, mode: str,
     return EPSpec(axes=tuple(dist.ep_axes), sizes=sizes,
                   n_experts=padded_experts_static(cfg), top_k=cfg.moe.top_k,
                   capacity_factor=cf, chunks=chunks, dtype=dtype,
-                  mode=("ll" if mode == "ll" else "ht"))
+                  mode=("ll" if mode == "ll" else "ht"),
+                  wire_dtype=getattr(cfg.moe, "wire_dtype", "fp32"))
 
 
 def moe_apply(cfg: ModelConfig, dist: Optional[DistCtx], p: dict, x: Array,
@@ -142,7 +143,8 @@ def _moe_host_sim(cfg: ModelConfig, dist: Optional[DistCtx],
         degree = max(d for d in (1, 2, 4) if (B * S) % d == 0
                      and e_pad % d == 0)
         spec = EPSpec(axes=("sim",), sizes=(degree,), n_experts=e_pad,
-                      top_k=mcfg.top_k, mode=mode)
+                      top_k=mcfg.top_k, mode=mode,
+                      wire_dtype=getattr(mcfg, "wire_dtype", "fp32"))
     wg, wu, wd = (np.asarray(p[k], np.float32)
                   for k in ("w_gate", "w_up", "w_down"))
     res = ep_be.dispatch_combine(

@@ -142,6 +142,45 @@ def receive_bucket_table(n_buckets: int, base: int, stride: int,
     return bases, extents, gids
 
 
+# ------------------------------------------------------------ wire layout --
+# Quantization block width for low-precision wire payloads (DESIGN.md §14):
+# one fp32 absmax scale per WIRE_BLOCK features, packed inline after the
+# quantized bytes.  128 matches the lane width of the TPU quantize kernel so
+# a scale block never straddles a vector register.
+WIRE_BLOCK = 128
+
+
+class WireLayout(NamedTuple):
+    """Byte layout of one token row on the wire for a given ``wire_dtype``.
+
+    ``token_bytes`` is the full per-row wire footprint (quantized payload +
+    inline scale blocks); GuardTable extents, fence counts, and every
+    receive-bucket stride derive from it, so scale blocks are part of the
+    registered range — a write that covers its scales covers its guard.
+    """
+
+    token_bytes: int   # full wire bytes per row (q_bytes + scale_bytes)
+    q_bytes: int       # quantized payload bytes (D elements)
+    n_blocks: int      # scale blocks per row (0 for fp32 passthrough)
+    scale_bytes: int   # inline fp32 scale bytes (4 * n_blocks)
+
+
+def wire_layout(d: int, wire_dtype: str = "fp32") -> WireLayout:
+    """Per-row wire layout for a D-feature token under ``wire_dtype``.
+
+    fp32 is the passthrough identity (4 bytes/feature, no scales); fp8/int8
+    carry 1 byte/feature plus one fp32 scale per :data:`WIRE_BLOCK` features.
+    This is the single source of the payload extent math: the substrate's
+    command streams, the codec, and the guard tables all size from here.
+    """
+    if wire_dtype == "fp32":
+        return WireLayout(4 * d, 4 * d, 0, 0)
+    if wire_dtype in ("fp8", "int8"):
+        nb = -(-d // WIRE_BLOCK)  # ceil
+        return WireLayout(d + 4 * nb, d, nb, 4 * nb)
+    raise ValueError(f"unknown wire_dtype: {wire_dtype!r}")
+
+
 # ------------------------------------------------------- slot assignment --
 def rank_in_group(group_id: Array, n_groups: int, valid: Array) -> Array:
     """Arrival-order rank of each row within its group (valid rows only).

@@ -1,3 +1,6 @@
+from repro.core.transport.codec import (WIRE_DTYPES, WireCodec,
+                                        dequantize_blocked, get_codec,
+                                        quantize_blocked)
 from repro.core.transport.ep_executor import (EPWorld, np_grouped_swiglu,
                                               np_swiglu)
 from repro.core.transport.fifo import (FLAG_FENCE, CmdColumns, FifoChannel,
@@ -12,4 +15,5 @@ __all__ = ["EPWorld", "np_grouped_swiglu", "np_swiglu", "FLAG_FENCE",
            "CmdColumns", "FifoChannel", "Op", "TransferCmd", "pack_cmds",
            "unpack_cmds", "Proxy", "SymmetricMemory", "ControlBuffer",
            "GuardTable", "ImmKind", "pack_imm", "unpack_imm", "Message",
-           "NetConfig", "Network"]
+           "NetConfig", "Network", "WIRE_DTYPES", "WireCodec", "get_codec",
+           "quantize_blocked", "dequantize_blocked"]

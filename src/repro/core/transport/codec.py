@@ -1,0 +1,196 @@
+"""Wire payload codec: fp8-e4m3 / int8 block quantization (DESIGN.md §14).
+
+The transport dispatches token payloads in a *wire dtype* negotiated via
+``EPSpec.wire_dtype`` / ``MoEConfig.wire_dtype``.  One row on the wire is
+
+    [ D quantized bytes | n_blocks fp32 scales ]        (fp8 / int8)
+    [ D * 4 fp32 bytes ]                                (fp32 passthrough)
+
+with one symmetric absmax scale per :data:`repro.core.plan.WIRE_BLOCK`
+features, packed inline after the payload so a single RDMA write carries
+everything needed to decode — GuardTable extents and fence counts size from
+:func:`repro.core.plan.wire_layout` and therefore cover the scale blocks.
+
+This module is the repo's single quantization implementation: the
+dual-dialect :func:`quantize_blocked` / :func:`dequantize_blocked` back the
+numpy substrate codecs here, the jnp kernel refs in
+``repro.kernels.quantize_pack``, and the int8 gradient-compression ring in
+``repro.distributed.compression``.  Decode always accumulates in fp32.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+from repro.core.plan import WIRE_BLOCK, WireLayout, _is_np, wire_layout
+
+Array = Any
+
+FP8_MAX = 448.0      # float8_e4m3fn finite max (no inf encoding)
+INT8_MAX = 127.0
+
+# scale = absmax * (1/qmax) as an f32 multiply, NOT absmax / qmax: XLA
+# strength-reduces division by a constant to a reciprocal multiply, so a
+# true divide in the numpy dialect would drift from the kernels by 1 ULP.
+# Both dialects multiply by the same pre-rounded f32 reciprocal.
+_QINV = {"fp8": np.float32(1.0) / np.float32(FP8_MAX),
+         "int8": np.float32(1.0) / np.float32(INT8_MAX)}
+
+
+def _f8_dtype(xp):
+    if xp is np:
+        import ml_dtypes  # ships with jax; numpy has no native fp8
+        return ml_dtypes.float8_e4m3fn
+    import jax.numpy as jnp
+    return jnp.float8_e4m3fn
+
+
+def _np_f8():
+    import ml_dtypes
+    return ml_dtypes.float8_e4m3fn
+
+
+def quantize_blocked(x: Array, wire_dtype: str = "int8",
+                     block: int = WIRE_BLOCK) -> tuple[Array, Array]:
+    """Symmetric per-block quantization over the last axis.
+
+    x: (..., D) fp32 → ``(q, scales)`` with q (..., D) in the wire dtype
+    (int8 or float8_e4m3fn) and scales (..., nb) fp32, nb = ceil(D/block).
+    The raw scale (including an exact 0 for all-zero blocks) is stored; the
+    divide guards with 1.0 so zero blocks quantize to exact zeros.  Values
+    are clipped to the representable range before the cast so fp division
+    rounding can never push a max-magnitude element into NaN territory.
+    Dual-dialect: numpy in → numpy out, jax in → jnp out, bit-identical.
+    """
+    is_np = _is_np(x)
+    if is_np:
+        xp = np
+    else:
+        import jax.numpy as jnp
+        xp = jnp
+    x = x.astype(xp.float32)
+    d = x.shape[-1]
+    nb = -(-d // block)
+    pad = nb * block - d
+    if pad:
+        widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+        xb = xp.pad(x, widths)
+    else:
+        xb = x
+    xb = xb.reshape(x.shape[:-1] + (nb, block))
+    if wire_dtype not in _QINV:
+        raise ValueError(f"unknown wire_dtype: {wire_dtype!r}")
+    qmax = FP8_MAX if wire_dtype == "fp8" else INT8_MAX
+    scale = xp.max(xp.abs(xb), axis=-1) * _QINV[wire_dtype]
+    s = xp.where(scale == 0, xp.float32(1.0), scale)
+    y = xp.clip(xb / s[..., None], -qmax, qmax)
+    if wire_dtype == "fp8":
+        # wire rounding contract: f32 -> f16 -> f8e4m3 (both RTNE).  XLA's
+        # CPU lowering of the f32->f8 convert double-rounds through f16;
+        # ml_dtypes casts directly and disagrees on ~0.3% of values.  Making
+        # the intermediate explicit in BOTH dialects pins bit-identical
+        # refs/kernels on every backend instead of chasing lowering details.
+        q = y.astype(xp.float16).astype(_f8_dtype(xp))
+    elif wire_dtype == "int8":
+        q = xp.clip(xp.round(y), -127, 127).astype(xp.int8)
+    else:
+        raise ValueError(f"unknown wire_dtype: {wire_dtype!r}")
+    q = q.reshape(x.shape[:-1] + (nb * block,))[..., :d]
+    return q, scale.astype(xp.float32)
+
+
+def dequantize_blocked(q: Array, scales: Array,
+                       block: int = WIRE_BLOCK) -> Array:
+    """Inverse of :func:`quantize_blocked`: (..., D) wire dtype + (..., nb)
+    fp32 scales → (..., D) fp32.  Accumulation downstream is fp32 by
+    contract (DESIGN.md §14) — this never returns a low-precision dtype."""
+    is_np = _is_np(q) or isinstance(q, np.ndarray)
+    if is_np:
+        xp = np
+    else:
+        import jax.numpy as jnp
+        xp = jnp
+    d = q.shape[-1]
+    nb = scales.shape[-1]
+    qf = q.astype(xp.float32)
+    pad = nb * block - d
+    if pad:
+        widths = [(0, 0)] * (q.ndim - 1) + [(0, pad)]
+        qf = xp.pad(qf, widths)
+    qf = qf.reshape(q.shape[:-1] + (nb, block))
+    out = qf * scales[..., None].astype(xp.float32)
+    return out.reshape(q.shape[:-1] + (nb * block,))[..., :d]
+
+
+# ------------------------------------------------------- substrate codecs --
+class WireCodec:
+    """Row codec for the numpy transport substrate: fp32 rows <-> wire
+    bytes.  ``encode`` packs (N, D) fp32 into (N, wire_bytes(D)) uint8 in
+    the inline-scale layout; ``decode`` is its fp32 inverse."""
+
+    name = "fp32"
+
+    def layout(self, d: int) -> WireLayout:
+        return wire_layout(d, self.name)
+
+    def wire_bytes(self, d: int) -> int:
+        return self.layout(d).token_bytes
+
+    def encode(self, x: np.ndarray) -> np.ndarray:
+        x = np.ascontiguousarray(x, np.float32)
+        return x.view(np.uint8).reshape(x.shape[0], -1)
+
+    def decode(self, buf: np.ndarray, d: int) -> np.ndarray:
+        buf = np.ascontiguousarray(buf, np.uint8)
+        return buf.view(np.float32).reshape(buf.shape[0], d).copy()
+
+
+class _QuantCodec(WireCodec):
+    def encode(self, x: np.ndarray) -> np.ndarray:
+        x = np.ascontiguousarray(x, np.float32)
+        n, d = x.shape
+        lo = self.layout(d)
+        q, scales = quantize_blocked(x, self.name)
+        out = np.empty((n, lo.token_bytes), np.uint8)
+        out[:, :lo.q_bytes] = q.view(np.uint8)
+        out[:, lo.q_bytes:] = np.ascontiguousarray(
+            scales, np.float32).view(np.uint8).reshape(n, lo.scale_bytes)
+        return out
+
+    def decode(self, buf: np.ndarray, d: int) -> np.ndarray:
+        lo = self.layout(d)
+        buf = np.asarray(buf, np.uint8)
+        q = buf[:, :lo.q_bytes].view(self._qdtype())
+        scales = np.ascontiguousarray(buf[:, lo.q_bytes:]).view(
+            np.float32).reshape(buf.shape[0], lo.n_blocks)
+        return dequantize_blocked(q, scales)
+
+    def _qdtype(self):
+        raise NotImplementedError
+
+
+class Fp8Codec(_QuantCodec):
+    name = "fp8"
+
+    def _qdtype(self):
+        return _np_f8()
+
+
+class Int8Codec(_QuantCodec):
+    name = "int8"
+
+    def _qdtype(self):
+        return np.int8
+
+
+_CODECS = {"fp32": WireCodec(), "fp8": Fp8Codec(), "int8": Int8Codec()}
+WIRE_DTYPES = tuple(_CODECS)
+
+
+def get_codec(name: str) -> WireCodec:
+    try:
+        return _CODECS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown wire_dtype: {name!r} (have {WIRE_DTYPES})") from None

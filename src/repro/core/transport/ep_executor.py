@@ -40,6 +40,7 @@ from typing import Callable, NamedTuple, Optional
 import numpy as np
 
 from repro.core import plan as planlib
+from repro.core.transport.codec import get_codec
 from repro.core.transport.fifo import FLAG_FENCE, Op, pack_cmds
 from repro.core.transport.proxy import Proxy, SymmetricMemory
 from repro.core.transport.semantics import IMM_VAL_MAX
@@ -77,6 +78,8 @@ class CommandStreams(NamedTuple):
 def build_command_streams(top_idx: np.ndarray, n_experts: int, eps: int,
                           capacity: int, tok_bytes: int, n_channels: int,
                           send0: int, recv0: int, ret0: int,
+                          wire_bytes: Optional[int] = None,
+                          out0: Optional[int] = None,
                           ) -> CommandStreams:
     """Vectorized LL-protocol command generation from a routing table.
 
@@ -93,22 +96,34 @@ def build_command_streams(top_idx: np.ndarray, n_experts: int, eps: int,
     so no expert slot rides the wire and nothing aliases past 63 experts
     per rank.  Combine writes land in the unregistered return region and
     therefore can never satisfy a dispatch fence.
+
+    ``wire_bytes`` is the per-token *wire* footprint (quantized payload +
+    inline scale blocks, ``plan.wire_layout``; defaults to ``tok_bytes`` =
+    fp32 passthrough): dispatch writes, receive-bucket strides, and the
+    registered guard extents all size from it, so fence counts and guard
+    ranges stay exact under compression — the scale blocks live inside the
+    registered range.  Combine payloads are always full-precision fp32
+    (``tok_bytes``; the fp32-accumulation contract, DESIGN.md §14), sourced
+    from the expert-output region at ``out0`` when given (the receive
+    buckets hold wire-format rows, which expert outputs must not clobber).
     """
     ti = np.ascontiguousarray(top_idx, np.int64)
     R, Tl, K = ti.shape
     tb = tok_bytes
+    wb = tok_bytes if wire_bytes is None else wire_bytes
     wp = planlib.make_world_plan(ti, n_experts, capacity)
     valid = wp.valid.reshape(-1)
 
     dst = ti // eps                                     # (R, Tl, K)
     el = np.where(wp.valid, ti % eps, 0)
     t_idx = np.arange(Tl, dtype=np.int64)[None, :, None]
-    src_off = np.broadcast_to(send0 + t_idx * tb, ti.shape)
+    src_off = np.broadcast_to(send0 + t_idx * wb, ti.shape)
     # dispatch writes land in the (src, expert) receive bucket at the plan's
-    # arrival-order slot; combine writes come back from that bucket into
-    # the source's expert-major return region (``ret_pos`` below)
+    # arrival-order slot; combine writes come back from that bucket's
+    # expert-output block into the source's expert-major return region
+    # (``ret_pos`` below)
     bucket = np.arange(R)[:, None, None] * eps + el     # (src, expert) id
-    recv_off = recv0 + (bucket * capacity + wp.rank) * tb
+    recv_off = recv0 + (bucket * capacity + wp.rank) * wb
     src_rank = np.broadcast_to(np.arange(R)[:, None, None], ti.shape)
 
     # both write streams ride an expert-keyed channel and are emitted
@@ -118,7 +133,7 @@ def build_command_streams(top_idx: np.ndarray, n_experts: int, eps: int,
     # batched RDMA messages.  Sequence semantics don't care: LL writes
     # gate nothing, and seqs are assigned at drain time in stream order.
     ch_w = np.where(wp.valid, ti % n_channels, 0)       # global expert key
-    writes = pack_cmds(int(Op.WRITE), dst, ch_w, src_off, recv_off, tb,
+    writes = pack_cmds(int(Op.WRITE), dst, ch_w, src_off, recv_off, wb,
                        0)[valid]
     w_pusher = src_rank.reshape(-1)[valid]
     w_channel = ch_w.reshape(-1)[valid]
@@ -141,7 +156,9 @@ def build_command_streams(top_idx: np.ndarray, n_experts: int, eps: int,
                    bstart[np.arange(R)[:, None, None],
                           np.where(wp.valid, ti, 0)] + wp.rank, 0)
     ret_off = ret0 + pos * tb
-    combines = pack_cmds(int(Op.WRITE), src_rank, ch_w, recv_off, ret_off,
+    comb_src = recv_off if out0 is None \
+        else out0 + (bucket * capacity + wp.rank) * tb
+    combines = pack_cmds(int(Op.WRITE), src_rank, ch_w, comb_src, ret_off,
                          tb, 0)[valid]
     c_pusher = dst.reshape(-1)[valid]
     c_channel = ch_w.reshape(-1)[valid]
@@ -168,7 +185,7 @@ def build_command_streams(top_idx: np.ndarray, n_experts: int, eps: int,
         combine_channel=c_channel,
         entry_expert=entry_expert,
         guard_table=planlib.receive_bucket_table(
-            ti.shape[0] * eps, recv0, capacity * tb),
+            ti.shape[0] * eps, recv0, capacity * wb),
         ret_pos=pos)
 
 
@@ -224,6 +241,9 @@ class EPWorld:
     # issues one wire message per descriptor
     columnar: bool = True
     coalesce: bool = True
+    # wire payload dtype for dispatch: "fp32" (passthrough) | "fp8" | "int8"
+    # (block-quantized with inline scales; combines stay fp32 — DESIGN §14)
+    wire_dtype: str = "fp32"
 
     def __post_init__(self):
         assert self.n_experts % self.n_ranks == 0
@@ -231,6 +251,8 @@ class EPWorld:
         # address ranges, not a 6-bit wire slot (DESIGN.md §12)
         self.eps = self.n_experts // self.n_ranks
         self.tok_bytes = self.d * 4
+        self.codec = get_codec(self.wire_dtype)
+        self.wire_tok_bytes = self.codec.wire_bytes(self.d)
         self.net = Network(self.net_cfg, self.n_ranks,
                            threadsafe=self.use_threads)
         self.proxies: list[Proxy] = []
@@ -253,7 +275,14 @@ class EPWorld:
     def _reset_timeline(self):
         self.timeline = {"compute_start_us": [], "first_compute_us": None,
                          "last_dispatch_write_us": 0.0,
-                         "last_delivery_us": 0.0, "overlap_us": 0.0}
+                         "last_delivery_us": 0.0, "overlap_us": 0.0,
+                         "wire_dtype": self.wire_dtype,
+                         # honest dispatch wire accounting (exact-equality
+                         # benchmark rows): payload bytes as serialized,
+                         # plus header/sub-write metadata, per the net cfg
+                         "dispatch_payload_bytes": 0,
+                         "dispatch_wire_bytes": 0,
+                         "dispatch_msgs": 0}
 
     def _note_compute(self, key):
         t = self.net.clock_us
@@ -265,12 +294,21 @@ class EPWorld:
     def _watch_dispatch(self, lo: int, hi: int):
         """Record, on the event clock, when each dispatch write (a payload
         write into the receive region [lo, hi)) is delivered — the overlap
-        metric compares the last of these against the first compute."""
+        metric compares the last of these against the first compute — and
+        accumulate its exact wire-byte footprint (payload, and payload +
+        header + per-sub-write metadata), the counters the compression
+        benchmarks gate on."""
+        cfg = self.net.cfg
+
         def hook(msg):
             if msg.kind == "write" and lo <= msg.dst_off < hi:
                 tl = self.timeline
                 tl["last_dispatch_write_us"] = max(
                     tl["last_dispatch_write_us"], msg.deliver_t)
+                tl["dispatch_payload_bytes"] += msg.size
+                tl["dispatch_wire_bytes"] += msg.size + cfg.hdr_bytes \
+                    + (msg.n_writes - 1) * cfg.sub_hdr_bytes
+                tl["dispatch_msgs"] += 1
         self.net.on_deliver_hook = hook
 
     def _finish_timeline(self):
@@ -309,31 +347,39 @@ class EPWorld:
             overlap = expert_fn is None
         if expert_fn is None:
             assert wg is not None and wu is not None and wd is not None
+        # wire-format regions size by the per-token wire footprint wb
+        # (quantized payload + inline scales; == tb for fp32 passthrough);
+        # expert outputs and combine returns are always fp32 (tb) and live
+        # outside the registered receive range
+        wb = self.wire_tok_bytes
         send0 = 0
-        recv0 = send0 + Tl * tb
-        ret0 = recv0 + R * eps * C * tb
+        recv0 = send0 + Tl * wb
+        out0 = recv0 + R * eps * C * wb       # expert outputs (fp32)
+        ret0 = out0 + R * eps * C * tb
         total = ret0 + Tl * K * tb
         mems, proxies = self._make_world(total, n_counters=R * eps)
         for r in range(R):
-            mems[r].data[send0:send0 + Tl * tb] = _to_bytes(x[r])
+            mems[r].data[send0:send0 + Tl * wb] = self.codec.encode(
+                np.ascontiguousarray(x[r], np.float32)).reshape(-1)
 
         # slot assignment + command generation: arrival order per
         # (src, expert) from the shared plan layer, packed as batched
         # TransferCmd streams (the metadata a real command stream encodes)
         cs = build_command_streams(top_idx, E, eps, C, tb, nc,
-                                   send0, recv0, ret0)
+                                   send0, recv0, ret0,
+                                   wire_bytes=wb, out0=out0)
         wp = cs.plan
         assert int(wp.counts.max()) <= C, "capacity overflow in setup"
 
         # register every rank's receive-bucket table with its proxy (the
         # RDMA MR model): dispatch writes resolve to their bucket's guard on
-        # delivery; the return region [ret0, total) stays unregistered, so
-        # combine writes can never satisfy a dispatch fence
+        # delivery; the expert-output and return regions [out0, total) stay
+        # unregistered, so combine writes can never satisfy a dispatch fence
         for p in proxies:
             p.register_table(*cs.guard_table)
 
         self._reset_timeline()
-        self._watch_dispatch(recv0, ret0)
+        self._watch_dispatch(recv0, out0)
 
         # ---- readiness state machine: expert e is ready once the fence of
         # every contributing source has applied at its destination ----------
@@ -367,19 +413,21 @@ class EPWorld:
             cnts = np.asarray(wp.counts)[:, e]
             srcs = np.flatnonzero(cnts)
             self._note_compute(("ll", e))
-            bases = [recv0 + (int(r) * eps + el) * C * tb for r in srcs]
-            toks = np.concatenate(
-                [mems[d].data[b:b + int(cnts[r]) * tb]
-                 for b, r in zip(bases, srcs)]).view(np.float32).reshape(-1, D)
+            bases = [recv0 + (int(r) * eps + el) * C * wb for r in srcs]
+            toks = self.codec.decode(np.concatenate(
+                [mems[d].data[b:b + int(cnts[r]) * wb]
+                 for b, r in zip(bases, srcs)]).reshape(-1, wb), D)
             out = np.ascontiguousarray(single_expert(e, toks),
                                        np.float32).view(np.uint8).reshape(-1)
-            # write outputs back over the receive bucket, then stream the
-            # combine writes for exactly this bucket
+            # write fp32 outputs into the expert-output region (slot-major
+            # per source, mirroring the bucket), then stream the combine
+            # writes for exactly this bucket
             off = 0
-            for b, r in zip(bases, srcs):
-                nb = int(cnts[r]) * tb
-                mems[d].data[b:b + nb] = out[off:off + nb]
-                off += nb
+            for r in srcs:
+                ob = out0 + (int(r) * eps + el) * C * tb
+                n_b = int(cnts[r]) * tb
+                mems[d].data[ob:ob + n_b] = out[off:off + n_b]
+                off += n_b
             rows = order[starts[e]:starts[e + 1]]
             if len(rows):
                 self._push_grouped(cs.combines[rows],
@@ -398,7 +446,7 @@ class EPWorld:
                               for a in np.nonzero(np.asarray(wp.counts) > 0))):
                 assert mems[e // eps].counters[r * eps + e % eps] == 1, (r, e)
             self._grouped_compute(mems, wp, expert_fn, wg, wu, wd,
-                                  recv0, ret0)
+                                  recv0, out0)
             self._push_grouped(cs.combines, cs.combine_pusher,
                                cs.combine_channel)
             self._pump_events(proxies)
@@ -418,19 +466,23 @@ class EPWorld:
                                .astype(np.float64))
         return out.astype(np.float32)
 
-    def _grouped_compute(self, mems, wp, expert_fn, wg, wu, wd, recv0, ret0):
+    def _grouped_compute(self, mems, wp, expert_fn, wg, wu, wd, recv0, out0):
         """Barrier-mode expert compute: one grouped call over every receive
-        bucket (the pre-pipelining behaviour; used for generic expert_fn)."""
+        bucket (the pre-pipelining behaviour; used for generic expert_fn).
+        Wire-format receive rows decode to fp32; outputs land in the fp32
+        expert-output region at ``out0``."""
         R, E, eps, C, D = (self.n_ranks, self.n_experts, self.eps,
                            self.capacity, self.d)
+        wb, tb = self.wire_tok_bytes, self.tok_bytes
         if expert_fn is None:
             expert_fn = lambda toks: np_grouped_swiglu(toks, wg, wu, wd)  # noqa: E731
         c_max = int(np.asarray(wp.counts).max())
         if not c_max:
             return
         self._note_compute(("ll", "grouped"))
-        bufs = [_from_bytes(mems[d].data[recv0:ret0], (R, eps, C, D)).copy()
-                for d in range(R)]
+        bufs = [self.codec.decode(
+            mems[d].data[recv0:out0].reshape(R * eps * C, wb),
+            D).reshape(R, eps, C, D) for d in range(R)]
         toks = np.concatenate([
             b[:, :, :c_max].transpose(1, 0, 2, 3).reshape(
                 eps, R * c_max, D) for b in bufs], axis=0)
@@ -439,10 +491,11 @@ class EPWorld:
         cnts = np.minimum(np.asarray(wp.counts), c_max).T.astype(np.int32)
         outs = np.asarray(_call_expert_fn(expert_fn, toks, cnts), np.float32)
         assert outs.shape == (E, R * c_max, D), outs.shape
-        for d in range(R):      # write outputs back over the receive buckets
+        for d in range(R):      # fp32 outputs into the expert-output region
+            full = np.zeros((R, eps, C, D), np.float32)
             o = outs[d * eps:(d + 1) * eps].reshape(eps, R, c_max, D)
-            bufs[d][:, :, :c_max] = o.transpose(1, 0, 2, 3)
-            mems[d].data[recv0:ret0] = _to_bytes(bufs[d])
+            full[:, :, :c_max] = o.transpose(1, 0, 2, 3)
+            mems[d].data[out0:out0 + R * eps * C * tb] = _to_bytes(full)
 
     # ===================================================== HT protocol =====
     def run_ht(self, x: np.ndarray, top_idx: np.ndarray, top_w: np.ndarray,
@@ -479,7 +532,10 @@ class EPWorld:
             f"n_chunks {n_chunks} exceeds the {IMM_VAL_MAX + 1} chunk ids " \
             "the immediate codec can carry"
         chunk_len = Tl // n_chunks
-        ent_b = tb + K * 8                    # token + K ids + K weights
+        # dedup-entry payload: wire-format token (quantized + inline scales
+        # for fp8/int8; == tb for fp32) + K expert ids + K combine weights
+        wb = self.wire_tok_bytes
+        ent_b = wb + K * 8
         if expert_fn is None:
             assert wg is not None and wu is not None and wd is not None
 
@@ -512,11 +568,11 @@ class EPWorld:
             eids = np.where(m, el_of[r][ts], -1).astype(np.int32)
             ws = np.where(m, top_w[r][ts], 0.0).astype(np.float32)
             payload = np.zeros((len(ts), ent_b), np.uint8)
-            payload[:, :tb] = np.ascontiguousarray(
-                x[r][ts], np.float32).view(np.uint8)
-            payload[:, tb:tb + K * 4] = np.ascontiguousarray(eids).view(
+            payload[:, :wb] = self.codec.encode(
+                np.ascontiguousarray(x[r][ts], np.float32))
+            payload[:, wb:wb + K * 4] = np.ascontiguousarray(eids).view(
                 np.uint8)
-            payload[:, tb + K * 4:] = np.ascontiguousarray(ws).view(np.uint8)
+            payload[:, wb + K * 4:] = np.ascontiguousarray(ws).view(np.uint8)
             stage = np.zeros((R * C, ent_b), np.uint8)
             stage[gs * C + slots] = payload
             mems[r].data[send0:recv0] = stage.reshape(-1)
@@ -541,9 +597,9 @@ class EPWorld:
             sl = slots[sel]
             raw = mems[g].data[recv0:comb0].reshape(R * C, ent_b)
             rows = raw[r * C + sl]
-            toks = rows[:, :tb].copy().view(np.float32).reshape(-1, D)
-            eids = rows[:, tb:tb + K * 4].copy().view(np.int32).reshape(-1, K)
-            ws = rows[:, tb + K * 4:].copy().view(np.float32).reshape(-1, K)
+            toks = self.codec.decode(np.ascontiguousarray(rows[:, :wb]), D)
+            eids = rows[:, wb:wb + K * 4].copy().view(np.int32).reshape(-1, K)
+            ws = rows[:, wb + K * 4:].copy().view(np.float32).reshape(-1, K)
             part = self._bucket_partials(g, toks, eids, ws, expert_fn,
                                          wg, wu, wd)
             comb = mems[g].data[comb0:ret0].reshape(R * C, tb)

@@ -15,9 +15,12 @@ Latency accounting (honest units, replacing the seed's ad-hoc
 ``base_latency_us * 0.01`` per-message fudge):
 
 - each (src, dst) link serialises: a message starts transmitting when the
-  link frees, takes ``(size + hdr_bytes) / bw_bytes_per_us`` on the wire
-  (``hdr_bytes`` models per-message header/immediate overhead, so zero-byte
-  atomics still occupy a wire slot),
+  link frees, takes ``(size + hdr_bytes + (n_writes - 1) * sub_hdr_bytes) /
+  bw_bytes_per_us`` on the wire (``hdr_bytes`` models per-message
+  header/immediate overhead, so zero-byte atomics still occupy a wire slot;
+  each *additional* sub-write a coalesced message carries charges
+  ``sub_hdr_bytes`` for its ``imm_vec``/``sub_off`` entry — coalescing
+  amortizes the message header, not the per-write metadata),
 - propagation adds ``base_latency_us`` once per message (NOT accumulated
   across messages — links are parallel),
 - srd adds a seeded jitter of up to ``reorder_window`` own-size wire slots,
@@ -70,6 +73,12 @@ class NetConfig:
     base_latency_us: float = 5.0
     bw_bytes_per_us: float = 25_000.0   # ~200 Gbit/s
     hdr_bytes: int = 64          # per-message wire overhead (header + imm)
+    # per-sub-write metadata a coalesced message carries for each sub-write
+    # beyond the first: its 4B immediate + 8B landing offset + 4B length.
+    # The first sub-write's metadata rides in hdr_bytes (same as an
+    # uncoalesced write), so coalescing N writes costs
+    # hdr_bytes + (N-1)*sub_hdr_bytes, never less than one write's header.
+    sub_hdr_bytes: int = 16
     seed: int = 0
 
 
@@ -102,6 +111,7 @@ class Network:
         self._jit_pos = 0                     # cursor into the draw buffer
         self.delivered = 0
         self.bytes_moved = 0
+        self.hdr_bytes_moved = 0      # header + per-sub-write metadata bytes
         self.coalesced_msgs = 0       # delivered messages carrying >1 write
         self.coalesced_writes = 0     # sub-writes delivered inside those
         self.clock_us = 0.0
@@ -132,7 +142,8 @@ class Network:
     def _schedule(self, msg: Message):
         msg.size = 0 if msg.payload is None else msg.payload.nbytes
         cfg = self.cfg
-        tx = (msg.size + cfg.hdr_bytes) / cfg.bw_bytes_per_us
+        meta = cfg.hdr_bytes + (msg.n_writes - 1) * cfg.sub_hdr_bytes
+        tx = (msg.size + meta) / cfg.bw_bytes_per_us
         link = (msg.src, msg.dst)
         msg.inject_t = self.clock_us
         free = self._link_free.get(link, 0.0)
@@ -169,15 +180,19 @@ class Network:
         nr = self.n_ranks
         sz = [0] * n
         ky = [0] * n
+        nw = [0] * n
         for i, m in enumerate(msgs):
             if m.payload is not None:
                 sz[i] = m.payload.nbytes
             m.size = sz[i]
             m.inject_t = clock
             ky[i] = m.src * nr + m.dst
+            nw[i] = m.n_writes
         sizes = np.asarray(sz, np.int64)
         key = np.asarray(ky, np.int64)
-        tx = (sizes + cfg.hdr_bytes) / cfg.bw_bytes_per_us
+        meta = cfg.hdr_bytes + (np.asarray(nw, np.int64) - 1) \
+            * cfg.sub_hdr_bytes
+        tx = (sizes + meta) / cfg.bw_bytes_per_us
         order = np.argsort(key, kind="stable")
         ko, txo = key[order], tx[order]
         brk = np.empty(n, bool)
@@ -271,11 +286,20 @@ class Network:
 
     def _account(self, m: Message) -> None:
         # caller holds the lock (threadsafe mode)
+        cfg = self.cfg
         self.bytes_moved += m.size
+        self.hdr_bytes_moved += cfg.hdr_bytes \
+            + (m.n_writes - 1) * cfg.sub_hdr_bytes
         self.delivered += 1
         if m.imm_vec is not None and len(m.imm_vec) > 1:
             self.coalesced_msgs += 1
             self.coalesced_writes += len(m.imm_vec)
+
+    @property
+    def wire_bytes_moved(self) -> int:
+        """Total bytes the serialization model charged: payload + headers +
+        per-sub-write metadata — the honest on-the-wire figure."""
+        return self.bytes_moved + self.hdr_bytes_moved
 
     def deliver_ready(self) -> int:
         """Deliver every event sharing the frontier timestamp in ONE lock

@@ -5,10 +5,14 @@ On a ring of P shards (the "data" axis), each hop sends an int8-quantised
 partial sum instead of fp32 — 4x fewer bytes over the wire.  Error feedback
 accumulates the per-shard quantisation residual into the next step's
 gradient, which keeps the compressed SGD unbiased over time.
+
+The quantizer itself lives in ``repro.core.transport.codec`` (the repo's
+single block-quantization implementation, shared with the wire-dispatch
+codec; DESIGN.md §14) — this module only supplies the ring/EF orchestration
+on top of it, at the gradient-friendly block width ``BLOCK``.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import repro.compat  # noqa: F401  jax version shims (jax.shard_map)
@@ -16,14 +20,16 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.transport.codec import dequantize_blocked, quantize_blocked
+
 Array = jax.Array
 
 BLOCK = 256
 
 
 class QChunk(NamedTuple):
-    q: Array        # int8 payload
-    scale: Array    # fp32 per-block scales
+    q: Array        # int8 payload, (nb, BLOCK)
+    scale: Array    # fp32 per-block scales, (nb,)
 
 
 def quantize(x: Array) -> QChunk:
@@ -31,15 +37,13 @@ def quantize(x: Array) -> QChunk:
     n = x.shape[0]
     nb = -(-n // BLOCK)
     xp = jnp.pad(x, (0, nb * BLOCK - n)).reshape(nb, BLOCK)
-    scale = jnp.max(jnp.abs(xp), axis=1) / 127.0
-    s = jnp.where(scale == 0, 1.0, scale)
-    q = jnp.clip(jnp.round(xp / s[:, None]), -127, 127).astype(jnp.int8)
-    return QChunk(q=q, scale=scale)
+    q, scale = quantize_blocked(xp, "int8", block=BLOCK)
+    return QChunk(q=q, scale=scale[:, 0])
 
 
 def dequantize(c: QChunk, n: int) -> Array:
-    x = (c.q.astype(jnp.float32) * c.scale[:, None]).reshape(-1)
-    return x[:n]
+    return dequantize_blocked(c.q, c.scale[:, None],
+                              block=BLOCK).reshape(-1)[:n]
 
 
 def compressed_psum_scatter(x: Array, axis: str) -> Array:

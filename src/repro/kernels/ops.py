@@ -102,6 +102,36 @@ def gather_swiglu_scatter(x_ext, src_of_slot, w_slot, w_gate, w_up, w_down,
         y.reshape(E * C, D).astype(jnp.float32) * w_f[:, None])[:-1]
 
 
+def gather_quantize(x_ext, src_of_slot, counts=None, *, wire_dtype: str,
+                    mode: str | None = None):
+    """Fused routing-gather -> block-quantize for low-precision wire
+    dispatch (DESIGN.md §14): returns ``(q, scales)`` of shapes
+    (n_slots, D) wire dtype and (n_slots, n_blocks) fp32.  Slots beyond a
+    bucket's occupied count are exact zeros with zero scales on every path.
+    """
+    from repro.kernels.quantize_pack import (gather_quantize_pallas,
+                                             gather_quantize_ref)
+    m = _mode(mode)
+    Tp1, D = x_ext.shape
+    if m == "ref" or Tp1 * D * x_ext.dtype.itemsize > GSS_VMEM_BYTES:
+        return gather_quantize_ref(x_ext, src_of_slot, counts,
+                                   wire_dtype=wire_dtype)
+    return gather_quantize_pallas(x_ext, src_of_slot, counts,
+                                  wire_dtype=wire_dtype,
+                                  interpret=(m == "interpret"))
+
+
+def dequantize_tokens(q, scales, *, mode: str | None = None):
+    """Inverse of :func:`gather_quantize` (per-row): fp32 out, the combine
+    side's accumulation dtype."""
+    m = _mode(mode)
+    if m == "ref":
+        from repro.kernels.quantize_pack import dequantize_ref
+        return dequantize_ref(q, scales)
+    from repro.kernels.quantize_pack import dequantize_pallas
+    return dequantize_pallas(q, scales, interpret=(m == "interpret"))
+
+
 def flash_attention(q, k, v, *, causal: bool = True, mode: str | None = None):
     m = _mode(mode)
     if m == "ref":

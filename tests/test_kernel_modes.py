@@ -73,6 +73,32 @@ def test_ops_gather_swiglu_scatter_mode_parity():
                                rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.parametrize("wdt", ["fp8", "int8"])
+def test_ops_gather_quantize_mode_parity(wdt):
+    """The fused routing-gather -> block-quantize -> scale-pack kernel
+    (ISSUE 6 wire codec) in interpret mode is bit-identical to the jnp
+    ref, and dequantize round-trips identically in both modes."""
+    e, c, d, t = 3, 10, 200, 9
+    rng = np.random.default_rng(8)
+    x_ext = jnp.asarray(np.concatenate(
+        [rng.standard_normal((t, d)).astype(np.float32),
+         np.zeros((1, d), np.float32)], 0))
+    counts = rng.integers(0, c + 1, e).astype(np.int32)
+    src = np.full((e * c,), t, np.int32)
+    for g in range(e):
+        src[g * c:g * c + counts[g]] = rng.integers(0, t, counts[g])
+    args = (x_ext, jnp.asarray(src), jnp.asarray(counts))
+    qr, sr = kops.gather_quantize(*args, wire_dtype=wdt, mode="ref")
+    qi, si = kops.gather_quantize(*args, wire_dtype=wdt, mode="interpret")
+    np.testing.assert_array_equal(
+        np.ascontiguousarray(np.asarray(qr)).view(np.uint8),
+        np.ascontiguousarray(np.asarray(qi)).view(np.uint8))
+    np.testing.assert_array_equal(np.asarray(sr), np.asarray(si))
+    np.testing.assert_array_equal(
+        np.asarray(kops.dequantize_tokens(qr, sr, mode="ref")),
+        np.asarray(kops.dequantize_tokens(qi, si, mode="interpret")))
+
+
 def test_ops_swiglu_db_env_routing(monkeypatch):
     """REPRO_SWIGLU_DB=1 routes kernel modes through the double-buffered
     variant; results must stay on the masked-ref contract."""

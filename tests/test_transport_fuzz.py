@@ -378,7 +378,8 @@ def test_control_buffer_batched_oracle_property(seed):
     _cb_batched_case(seed)
 
 
-def _ep_world_ab(mode, proto, eps, seed, columnar, coalesce, threaded):
+def _ep_world_ab(mode, proto, eps, seed, columnar, coalesce, threaded,
+                 wire_dtype="fp32"):
     """One EP run with the given drain configuration; returns
     (out, mems, per-peer apply logs, delivered count, world)."""
     rng = np.random.default_rng(seed)
@@ -399,7 +400,7 @@ def _ep_world_ab(mode, proto, eps, seed, columnar, coalesce, threaded):
                 net_cfg=NetConfig(mode=mode, seed=seed,
                                   reorder_window=window),
                 use_threads=threaded, n_threads=2,
-                columnar=columnar, coalesce=coalesce)
+                columnar=columnar, coalesce=coalesce, wire_dtype=wire_dtype)
     try:
         if proto == "ll":
             out = w.run(x, ti, tw, wg, wu, wd)
@@ -425,13 +426,14 @@ def _quiesce_clean(w):
             assert all(not h for h in cb._arrived.values())
 
 
-def _ep_batched_oracle_case(mode, proto, eps, seed, threaded=False):
+def _ep_batched_oracle_case(mode, proto, eps, seed, threaded=False,
+                            wire_dtype="fp32"):
     o_s, m_s, l_s, d_s, w_s = _ep_world_ab(
         mode, proto, eps, seed, columnar=False, coalesce=False,
-        threaded=False)
+        threaded=False, wire_dtype=wire_dtype)
     o_c, m_c, l_c, d_c, w_c = _ep_world_ab(
         mode, proto, eps, seed, columnar=True, coalesce=False,
-        threaded=False)
+        threaded=False, wire_dtype=wire_dtype)
     # columnar drain without coalescing issues the identical wire schedule:
     # bit-identical receive buffers, apply logs, and delivery counts
     np.testing.assert_array_equal(o_s, o_c)
@@ -445,7 +447,7 @@ def _ep_batched_oracle_case(mode, proto, eps, seed, threaded=False):
     # multiset, and strictly no more messages are delivered
     o_z, m_z, l_z, d_z, w_z = _ep_world_ab(
         mode, proto, eps, seed, columnar=True, coalesce=True,
-        threaded=threaded)
+        threaded=threaded, wire_dtype=wire_dtype)
     np.testing.assert_array_equal(o_s, o_z)
     for a, b in zip(m_s, m_z):
         np.testing.assert_array_equal(a, b)
@@ -479,3 +481,136 @@ def test_ep_batched_oracle_threaded(proto):
        eps=st.sampled_from(EPS_GRID))
 def test_ep_batched_oracle_property(seed, mode, proto, eps):
     _ep_batched_oracle_case(mode, proto, eps, seed)
+
+
+# ======================================================================
+# Part 4: compressed-dispatch conformance (ISSUE 6 wire dtypes)
+# ======================================================================
+# Quantized payloads change wire-row sizes (d bytes + inline fp32 scales
+# instead of 4d) but must not change protocol behavior: fences still fire
+# after exactly the same write counts, guard ranges cover the scale bytes,
+# drains quiesce clean, and the result matches the dense fp32 oracle
+# within the dtype's quantization tolerance (exact for fp32 passthrough).
+WIRE_TOL = {"fp32": 0.0, "fp8": 0.2, "int8": 0.05}
+
+
+def _run_ep_wire_case(mode, proto, eps, wdt, threaded, seed):
+    rng = np.random.default_rng(seed)
+    R = 2
+    E = eps * R
+    K = int(rng.integers(1, 4))
+    D = F = 8
+    Tl = int(rng.integers(4, 9))
+    window = int(rng.choice([1, 16, 128]))
+    x = rng.standard_normal((R, Tl, D)).astype(np.float32)
+    ti = rng.integers(0, E, size=(R, Tl, K)).astype(np.int32)
+    tw = rng.random((R, Tl, K)).astype(np.float32)
+    tw /= tw.sum(-1, keepdims=True)
+    wg = (rng.standard_normal((E, D, F)) * 0.2).astype(np.float32)
+    wu = (rng.standard_normal((E, D, F)) * 0.2).astype(np.float32)
+    wd = (rng.standard_normal((E, F, D)) * 0.2).astype(np.float32)
+    w = EPWorld(n_ranks=R, n_experts=E, top_k=K, d=D, f=F, capacity=Tl * K,
+                net_cfg=NetConfig(mode=mode, seed=seed,
+                                  reorder_window=window),
+                use_threads=threaded, n_threads=2, wire_dtype=wdt)
+    try:
+        if proto == "ll":
+            out = w.run(x, ti, tw, wg, wu, wd)
+        else:
+            out = w.run_ht(x, ti, tw, wg, wu, wd,
+                           n_chunks=int(rng.integers(1, 5)))
+        ref = EPWorld.oracle(x, ti, tw, wg, wu, wd)
+        if wdt == "fp32":
+            np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+        else:
+            err = np.abs(out - ref).max()
+            scale = np.abs(ref).max() + 1e-9
+            assert err <= WIRE_TOL[wdt] * scale, \
+                f"{wdt} relerr {err / scale:.4f} > {WIRE_TOL[wdt]}"
+        assert w.timeline["wire_dtype"] == wdt
+        assert w.timeline["dispatch_msgs"] > 0
+        assert w.timeline["dispatch_wire_bytes"] > \
+            w.timeline["dispatch_payload_bytes"]   # headers charged
+        if wdt != "fp32" and proto == "ll":
+            # honest accounting: LL dispatch payloads are whole wire rows,
+            # each smaller than the 4D bytes fp32 would have moved
+            assert w.wire_tok_bytes < 4 * D
+            assert w.timeline["dispatch_payload_bytes"] % w.wire_tok_bytes \
+                == 0
+        assert w.net.pending == 0
+        for p in w.proxies:
+            assert p.error is None and not p.busy
+            for cb in p.ctrl.values():
+                assert cb.n_held == 0
+                assert all(not h for h in cb._arrived.values())
+    finally:
+        if threaded:
+            for p in w.proxies:
+                p.stop()
+
+
+@pytest.mark.parametrize("mode", ["rc", "srd"])
+@pytest.mark.parametrize("wdt", ["fp32", "fp8", "int8"])
+def test_ep_wire_dtype_conformance_seeded(mode, wdt):
+    """{rc, srd} x {ll, ht} x {fp32, fp8, int8}: oracle agreement within
+    dtype tolerance + clean quiesce with compressed wire rows."""
+    for proto in ("ll", "ht"):
+        for seed in (0, 1):
+            _run_ep_wire_case(mode, proto, 4, wdt, threaded=False, seed=seed)
+
+
+@pytest.mark.parametrize("proto", ["ll", "ht"])
+def test_ep_wire_dtype_threaded(proto):
+    """Threaded-proxy point of the compressed matrix."""
+    _run_ep_wire_case("srd", proto, 4, "fp8", threaded=True, seed=2)
+
+
+@pytest.mark.parametrize("wdt", ["fp8", "int8"])
+def test_ep_wire_batched_oracle_compressed(wdt):
+    """Scalar vs columnar vs coalesced drains must agree bit-for-bit on
+    compressed payload bytes too (apply-log equivalence from Part 3)."""
+    for proto in ("ll", "ht"):
+        for seed in (7, 8):
+            _ep_batched_oracle_case("srd", proto, 4, seed, wire_dtype=wdt)
+
+
+@pytest.mark.parametrize("wdt", ["fp32", "fp8", "int8"])
+def test_ll_guard_ranges_cover_scale_blocks(wdt):
+    """Guard-range exactness with inline scales: every byte of a receive
+    bucket — quantized payload AND its scale words — resolves to that
+    bucket's guard, and bucket boundaries stay exact (stride capacity*wb)."""
+    R, eps, K, D, Tl = 2, 2, 2, 200, 4   # D=200 -> ragged last scale block
+    E = eps * R
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((R, Tl, D)).astype(np.float32)
+    ti = rng.integers(0, E, size=(R, Tl, K)).astype(np.int32)
+    tw = np.full((R, Tl, K), 1.0 / K, np.float32)
+    wg = (rng.standard_normal((E, D, 8)) * 0.2).astype(np.float32)
+    wu = (rng.standard_normal((E, D, 8)) * 0.2).astype(np.float32)
+    wd = (rng.standard_normal((E, 8, D)) * 0.2).astype(np.float32)
+    w = EPWorld(n_ranks=R, n_experts=E, top_k=K, d=D, f=8,
+                capacity=Tl * K, net_cfg=NetConfig(mode="rc", seed=0),
+                wire_dtype=wdt)
+    w.run(x, ti, tw, wg, wu, wd)
+    wb = w.wire_tok_bytes
+    from repro.core.plan import wire_layout
+    assert wb == wire_layout(D, wdt).token_bytes
+    cap = Tl * K
+    recv0 = Tl * wb                       # LL layout: recv follows send
+    for p in w.proxies:
+        for b in range(R * eps):
+            base = recv0 + b * cap * wb
+            assert p.guards.resolve(base) == b
+            assert p.guards.resolve(base + cap * wb - 1) == b, \
+                "scale bytes fell outside their bucket's guard"
+            if b + 1 < R * eps:
+                assert p.guards.resolve(base + cap * wb) == b + 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1),
+       mode=st.sampled_from(["rc", "srd"]),
+       proto=st.sampled_from(["ll", "ht"]),
+       wdt=st.sampled_from(["fp32", "fp8", "int8"]))
+def test_ep_wire_dtype_property(seed, mode, proto, wdt):
+    _run_ep_wire_case(mode, proto, 4, wdt, threaded=False, seed=seed)
