@@ -55,6 +55,50 @@ assert p32 / pq >= 3.5 and worlds["fp8"].net.clock_us < worlds["fp32"].net.clock
 print(f"ci.sh: compressed-dispatch smoke OK ({p32 / pq:.2f}x payload reduction)")
 EOF
 
+# Replicated-experts smoke: one Zipf skew point end-to-end (single vs
+# online-rebalanced replicated placement, weight migration over the
+# substrate included) must hold the p99 event-clock win the exact-gated
+# fig16_ep_sweep/skew_clock rows pin, plus a fast replication fuzz point
+# (skewed routing x replicas x {rc, srd} against the logical oracle).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+import numpy as np
+from benchmarks.fig16_ep_sweep import P99_GATE_RATIO, run_skew_point
+from repro.core import plan as planlib
+from repro.core.transport.ep_executor import EPWorld
+from repro.core.transport.simulator import NetConfig
+
+s = run_skew_point(1.0)
+assert s["p99_ratio"] >= P99_GATE_RATIO, s
+
+# replication fuzz point: skewed routing x replicas {1, 2} x {rc, srd},
+# physical world vs the LOGICAL dense oracle (pytest runs the full Part 5)
+rng = np.random.default_rng(0)
+R, E, K, D, F, Tl = 2, 8, 2, 8, 8, 8
+x = rng.standard_normal((R, Tl, D)).astype(np.float32)
+p = (1.0 + np.arange(E)) ** -1.2
+ti = rng.choice(E, size=(R, Tl, K), p=p / p.sum()).astype(np.int32)
+tw = rng.random((R, Tl, K)).astype(np.float32)
+tw /= tw.sum(-1, keepdims=True)
+wg, wu, wd = ((rng.standard_normal(sh) * 0.2).astype(np.float32)
+              for sh in ((E, D, F), (E, D, F), (E, F, D)))
+ref = EPWorld.oracle(x, ti, tw, wg, wu, wd)
+loads = planlib.group_counts(ti.reshape(-1), E, ti.reshape(-1) >= 0)
+for mode in ("rc", "srd"):
+    for factor in (1, 2):
+        pl = (planlib.identity_placement(E) if factor == 1
+              else planlib.greedy_placement(loads, E * factor, R))
+        tis = planlib.split_to_physical_world(pl, ti)
+        p2l = np.asarray(pl.phys_to_logical)
+        w = EPWorld(n_ranks=R, n_experts=pl.n_physical, top_k=K, d=D, f=F,
+                    capacity=Tl * K, net_cfg=NetConfig(mode=mode, seed=0))
+        out = w.run(x, tis, tw, wg[p2l], wu[p2l], wd[p2l])
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+        assert not w.net.pending and not any(pr.busy for pr in w.proxies)
+print(f"ci.sh: replicated-experts smoke OK "
+      f"(alpha=1.0 p99 win {s['p99_ratio']:.2f}x, "
+      f"migrate {s['migrate_bytes']} bytes in {s['migrate_us']:.0f}us)")
+EOF
+
 # Benchmark smoke: two host benchmarks end-to-end (fig15 FIFO stress +
 # the bench_transport batched-path microbench, whose counter rows are
 # exact-gated), plus the machine-readable results file the perf trajectory

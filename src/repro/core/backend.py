@@ -100,7 +100,16 @@ class SimulatedRDMABackend:
     Capacity is lossless (``T_local * K`` slots per (src, expert) bucket),
     so with a jax spec whose capacity factor avoids drops the two backends
     must agree exactly on the same routing table.  ``expert_fn`` must cover
-    all ``spec.n_experts`` global experts: ``(E, N, D) -> (E, N, D)``.
+    all ``spec.n_physical`` global expert slots: ``(E, N, D) -> (E, N, D)``
+    (== ``spec.n_experts`` without a replicated placement; with one, row
+    block p holds physical slot p = logical ``phys_to_logical[p]``).
+
+    Replicated placements translate the logical routing table to physical
+    slots per source rank (``plan.split_to_physical_world`` — the same
+    deterministic round-robin split the jax path applies per shard) before
+    command-stream generation, so guard tables, fence counts and
+    ``ret_pos`` all size from the replicated layout with no executor
+    changes.
     """
 
     name = "simulated_rdma"
@@ -139,7 +148,17 @@ class SimulatedRDMABackend:
             out = planlib.call_expert_fn(expert_fn, toks, counts)
             return np.asarray(out, np.float32)
 
-        world = EPWorld(n_ranks=R, n_experts=spec.n_experts, top_k=K, d=D,
+        # replicated placement: translate logical->physical per source rank
+        # (numpy dialect of the same deterministic split the jax path runs)
+        pl_obj = None
+        p_tab = getattr(spec, "placement", None)
+        if p_tab is not None:
+            pl_obj = planlib.placement_from_table(np.asarray(p_tab, np.int32))
+            if pl_obj.is_identity:
+                pl_obj = None
+        E_phys = len(p_tab) if p_tab is not None else spec.n_experts
+
+        world = EPWorld(n_ranks=R, n_experts=E_phys, top_k=K, d=D,
                         capacity=Tl * K, net_cfg=self.net_cfg,
                         n_channels=self.n_channels,
                         use_threads=self.use_threads,
@@ -149,6 +168,8 @@ class SimulatedRDMABackend:
         xs = x.reshape(R, Tl, D)
         tis = top_idx.reshape(R, Tl, K)
         tws = top_w.reshape(R, Tl, K)
+        if pl_obj is not None:
+            tis = planlib.split_to_physical_world(pl_obj, tis)
         if spec.mode == "ht":
             # HT: chunked dedup'd dispatch + hierarchical reduce, executed
             # literally on the substrate; capacity Tl per (src, dst) bucket
@@ -158,4 +179,9 @@ class SimulatedRDMABackend:
         else:
             out = world.run(xs, tis, tws, expert_fn=global_expert_fn)
         self.last_world = world
-        return DispatchResult(out.reshape(T, D), {"dropped": np.float32(0.0)})
+        flat = np.asarray(tis).reshape(-1)
+        load_phys = planlib.group_counts(flat, E_phys, flat >= 0)
+        return DispatchResult(
+            out.reshape(T, D),
+            {"dropped": np.float32(0.0), "load_phys": load_phys,
+             "imbalance": np.float32(planlib.load_imbalance(load_phys))})

@@ -36,6 +36,7 @@ from typing import Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core import plan as planlib
@@ -63,6 +64,15 @@ class EPSpec:
     # Compression applies to dispatch only; combine returns and all
     # accumulation stay full precision.
     wire_dtype: str = "fp32"
+    # replicated expert placement: phys->logical slot table as a hashable
+    # tuple (``Placement.key()``), length = physical slot count.  None (or
+    # the identity table) keeps today's single-placement layout bit-for-bit;
+    # otherwise routing splits each logical expert's tokens across its
+    # replicas deterministically (plan.split_to_physical) and every
+    # downstream structure — a2a buckets, guard tables, fence counts,
+    # ret_pos — sizes from ``n_physical``.  ``n_experts`` stays the LOGICAL
+    # (router-space) count.
+    placement: Optional[tuple[int, ...]] = None
 
     @property
     def degree(self) -> int:
@@ -72,6 +82,26 @@ class EPSpec:
     def experts_per_shard(self) -> int:
         assert self.n_experts % self.degree == 0
         return self.n_experts // self.degree
+
+    @property
+    def n_physical(self) -> int:
+        """Physical expert-slot count (== n_experts without replication)."""
+        return len(self.placement) if self.placement is not None \
+            else self.n_experts
+
+    @property
+    def physical_per_shard(self) -> int:
+        assert self.n_physical % self.degree == 0
+        return self.n_physical // self.degree
+
+    def placement_obj(self) -> Optional[planlib.Placement]:
+        """Materialized Placement, or None for the identity layout (the
+        replicas=1 contract: identity tables take the exact legacy path)."""
+        if self.placement is None:
+            return None
+        pl = planlib.placement_from_table(
+            np.asarray(self.placement, np.int32))
+        return None if pl.is_identity else pl
 
     @property
     def two_level(self) -> bool:
@@ -158,11 +188,16 @@ def dispatch_combine_ll(spec: EPSpec, x: Array, top_idx: Array, top_w: Array,
     """One-shot per-choice dispatch -> grouped expert FFN -> combine.
 
     x: (T, D); top_idx/top_w: (T, K).  expert_fn maps (E_local, C_in, D) ->
-    (E_local, C_in, D) applying local expert i to row block i.
+    (E_local, C_in, D) applying local expert i to row block i — under a
+    replicated ``spec.placement`` the row blocks are PHYSICAL slots (the
+    caller gathers weights through ``phys_to_logical``).
     """
     T, D = x.shape
     K = spec.top_k
-    E, P, eps = spec.n_experts, spec.degree, spec.experts_per_shard
+    pl_obj = spec.placement_obj()
+    if pl_obj is not None:
+        top_idx = planlib.split_to_physical(pl_obj, top_idx)
+    E, P, eps = spec.n_physical, spec.degree, spec.physical_per_shard
     # hard_max is T*K, not T: routing tables may send a token to the same
     # expert more than once (e.g. random tables in tests)
     C = capacity or _cap(T * K / E, spec.capacity_factor, hard_max=T * K)
@@ -219,8 +254,13 @@ def dispatch_combine_ll(spec: EPSpec, x: Array, top_idx: Array, top_w: Array,
         jnp.where(keep, rows, T)].add(contrib)[:-1]
     dropped = pl.n_dropped / jnp.maximum(valid.sum(), 1)
     occupancy = jnp.minimum(pl.counts, C).sum() / (E * C)
+    # global per-physical-slot load + imbalance (max/mean): the one stat the
+    # online re-placer and the benchmarks both read (DESIGN.md §15)
+    load_phys = lax.psum(pl.counts, spec.flat_axis())
     return DispatchResult(out.astype(x.dtype),
-                          {"dropped": dropped, "occupancy": occupancy})
+                          {"dropped": dropped, "occupancy": occupancy,
+                           "load_phys": load_phys,
+                           "imbalance": planlib.load_imbalance(load_phys)})
 
 
 # =========================================================== HT mode ======
@@ -293,7 +333,7 @@ def _expert_apply(spec: EPSpec, x_in: Array, eid: Array, w: Array,
     """
     N, D = x_in.shape
     K = eid.shape[1]
-    eps = spec.experts_per_shard
+    eps = spec.physical_per_shard
     Ce = _cap(n_tokens_hint * K / eps, cf, hard_max=N * K)
     pl = planlib.make_plan(eid, eps, Ce)
     flat_e = eid.reshape(-1)
@@ -343,6 +383,11 @@ def dispatch_combine_ht(spec: EPSpec, x: Array, top_idx: Array, top_w: Array,
                         expert_fn: Callable[[Array], Array]) -> DispatchResult:
     """Chunked + dedup'd + hierarchical dispatch/combine (paper HT mode)."""
     T, D = x.shape
+    pl_obj = spec.placement_obj()
+    if pl_obj is not None:
+        # one replica split for the whole table (not per chunk), matching
+        # the substrate's per-source round-robin semantics
+        top_idx = planlib.split_to_physical(pl_obj, top_idx)
     n_chunks = planlib.effective_chunks(T, spec.chunks)
     Tc = T // n_chunks
     outs, drops, total = [], jnp.int32(0), jnp.int32(0)
@@ -356,17 +401,24 @@ def dispatch_combine_ht(spec: EPSpec, x: Array, top_idx: Array, top_w: Array,
         drops += d
         total += Tc * spec.top_k
     out = jnp.concatenate(outs, axis=0) if n_chunks > 1 else outs[0]
+    load_phys = lax.psum(
+        planlib.group_counts(top_idx.reshape(-1), spec.n_physical,
+                             (top_idx >= 0).reshape(-1)), spec.flat_axis())
     return DispatchResult(out.astype(x.dtype),
                           {"dropped": drops / jnp.maximum(total, 1),
                            "occupancy": sum(occs) / n_chunks,
-                           "chunks": n_chunks})
+                           "chunks": n_chunks,
+                           "load_phys": load_phys,
+                           "imbalance": planlib.load_imbalance(load_phys)})
 
 
 def _ht_one_chunk(spec: EPSpec, x: Array, top_idx: Array, top_w: Array,
                   expert_fn) -> tuple[Array, Array, Array]:
+    # top_idx is already PHYSICAL here (dispatch_combine_ht splits replicas
+    # once up front); all bucketing below runs in the physical slot space
     T, D = x.shape
     K = spec.top_k
-    E, eps = spec.n_experts, spec.experts_per_shard
+    E, eps = spec.n_physical, spec.physical_per_shard
     cf = spec.capacity_factor
     valid = top_idx >= 0
 

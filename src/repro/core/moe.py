@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, _round_up
+from repro.core import plan as planlib
 from repro.core.backend import get_backend
 from repro.core.ep import EPSpec, moe_ref
 from repro.core.routing import RouterParams, route, router_init
@@ -111,8 +112,12 @@ def moe_apply(cfg: ModelConfig, dist: Optional[DistCtx], p: dict, x: Array,
         rout = route(mcfg, rparams, t, mcfg.n_experts)
         y = moe_ref(t, rout.top_idx, rout.top_w, p["w_gate"], p["w_up"],
                     p["w_down"])
+        load = planlib.expert_load(rout.top_idx, e_pad)
+        # imbalance over the REAL experts only: padded slots never receive
+        # tokens and would dilute the mean (4 real in 16 padded -> 4x)
         aux = {"aux_loss": rout.aux_loss, "dropped": jnp.float32(0.0),
-               "load": jax.nn.one_hot(rout.top_idx, e_pad).sum((0, 1))}
+               "load": load,
+               "imbalance": planlib.load_imbalance(load[:mcfg.n_experts])}
         y = y.reshape(B, S, D)
     else:
         y, aux = _moe_dist(cfg, dist, rparams, p, x, mode, chunks, ep_be)
@@ -152,9 +157,16 @@ def _moe_host_sim(cfg: ModelConfig, dist: Optional[DistCtx],
         np.asarray(rout.top_w, np.float32),
         lambda toks, counts=None: np_grouped_swiglu(toks, wg, wu, wd,
                                                     counts=counts))
+    load = planlib.expert_load(rout.top_idx, e_pad)
+    # with a replicated placement the backend's *physical*-slot stat is the
+    # truth; without one, report over the real (unpadded) logical experts
+    if getattr(spec, "placement", None) is not None:
+        imb = jnp.float32(res.aux["imbalance"])
+    else:
+        imb = planlib.load_imbalance(load[:mcfg.n_experts])
     aux = {"aux_loss": rout.aux_loss,
            "dropped": jnp.float32(res.aux["dropped"]),
-           "load": jax.nn.one_hot(rout.top_idx, e_pad).sum((0, 1))}
+           "load": load, "imbalance": imb}
     return jnp.asarray(res.out, x.dtype).reshape(B, S, D), aux
 
 
@@ -185,14 +197,18 @@ def _moe_dist(cfg: ModelConfig, dist: DistCtx, rparams: RouterParams, p: dict,
                                           fn)
         y = res.out.reshape(Bl, Sl, D)
         denom = jnp.float32(nshards)
+        # global load via the shared helper (one definition for all three
+        # moe branches); imbalance is max/mean physical-slot load — with
+        # the identity placement the logical counts ARE the physical ones
+        load_g = jax.lax.psum(
+            planlib.expert_load(rout.top_idx, spec.n_experts), all_axes)
         aux = {
             "aux_loss": jax.lax.psum(rout.aux_loss, all_axes) / denom,
             "dropped": jax.lax.psum(res.aux["dropped"], all_axes) / denom,
             "occupancy": jax.lax.psum(
                 jnp.float32(res.aux.get("occupancy", 0.0)), all_axes) / denom,
-            "load": jax.lax.psum(
-                jax.nn.one_hot(rout.top_idx, spec.n_experts).sum((0, 1)),
-                all_axes),
+            "load": load_g,
+            "imbalance": planlib.load_imbalance(load_g[:mcfg.n_experts]),
         }
         return y, aux
 
@@ -200,7 +216,7 @@ def _moe_dist(cfg: ModelConfig, dist: DistCtx, rparams: RouterParams, p: dict,
     if rb is None:
         rb = jnp.zeros((spec.n_experts,), jnp.float32)
     out_specs = (x_spec, {"aux_loss": P(), "dropped": P(), "occupancy": P(),
-                          "load": P()})
+                          "load": P(), "imbalance": P()})
     y, aux = jax.shard_map(
         island, mesh=mesh,
         in_specs=(x_spec, P(None, None), P(None),

@@ -297,6 +297,183 @@ def make_world_plan(group_idx: Array, n_groups: int,
     return WorldPlan(rank, counts, valid, keep, n_dropped)
 
 
+# ------------------------------------------------- replicated placement ---
+class Placement(NamedTuple):
+    """Logical->physical expert placement (replicated expert groups).
+
+    One logical expert owns ``n_replicas[e]`` physical slots; slot ``p``
+    computes logical expert ``phys_to_logical[p]`` and lives on rank
+    ``p // (n_physical // n_ranks)`` — the same slot->rank rule both
+    backends already use for experts, so a placement *is* a plan-layer
+    object: guard tables, fence counts and ``ret_pos`` all size from the
+    physical slot space.  Replica ``j`` of expert ``e`` is
+    ``logical_to_phys[e, j]`` (ascending physical id; -1 pads).
+    """
+
+    phys_to_logical: np.ndarray   # (E_phys,) int32
+    logical_to_phys: np.ndarray   # (E_log, max_replicas) int32, -1 pad
+    n_replicas: np.ndarray        # (E_log,) int32, all >= 1
+
+    @property
+    def n_physical(self) -> int:
+        return int(self.phys_to_logical.shape[0])
+
+    @property
+    def n_logical(self) -> int:
+        return int(self.n_replicas.shape[0])
+
+    @property
+    def is_identity(self) -> bool:
+        """True iff this is exactly today's single-placement layout (the
+        replicas=1 degenerate case the bit-identity contract pins)."""
+        return (self.n_physical == self.n_logical and bool(
+            (self.phys_to_logical
+             == np.arange(self.n_logical, dtype=np.int32)).all()))
+
+    def key(self) -> tuple[int, ...]:
+        """Hashable form (what a frozen EPSpec carries)."""
+        return tuple(int(v) for v in self.phys_to_logical)
+
+
+def placement_from_table(phys_to_logical) -> Placement:
+    """Build a full Placement from its (E_phys,) phys->logical table."""
+    p2l = np.ascontiguousarray(np.asarray(phys_to_logical).reshape(-1),
+                               np.int32)
+    assert p2l.size and p2l.min() >= 0
+    n_log = int(p2l.max()) + 1
+    reps = np.bincount(p2l, minlength=n_log).astype(np.int32)
+    assert (reps > 0).all(), "every logical expert needs >= 1 physical slot"
+    # replica order within a logical expert = ascending physical id
+    j = _rank_in_group_np(p2l, n_log, np.ones(p2l.size, bool))
+    l2p = np.full((n_log, int(reps.max())), -1, np.int32)
+    l2p[p2l, j] = np.arange(p2l.size, dtype=np.int32)
+    return Placement(p2l, l2p, reps)
+
+
+def identity_placement(n_experts: int) -> Placement:
+    return placement_from_table(np.arange(n_experts, dtype=np.int32))
+
+
+def replicate_uniform(n_logical: int, factor: int) -> Placement:
+    """``factor`` replicas per expert, tiled so replica j of expert e sits
+    at physical slot ``j * n_logical + e`` — replicas of one expert land on
+    distinct ranks whenever experts-per-rank divides ``n_logical``."""
+    return placement_from_table(
+        np.tile(np.arange(n_logical, dtype=np.int32), factor))
+
+
+def greedy_placement(loads, n_physical: int, n_ranks: int) -> Placement:
+    """Greedy bin-packing placement from observed per-logical-expert loads.
+
+    Two deterministic passes: (1) grant the ``n_physical - E_log`` extra
+    replicas one at a time to the expert with the largest per-replica load
+    share (ties -> lowest id); (2) pack replica slots onto ranks heaviest
+    share first, each onto the least-loaded rank with free slots, preferring
+    ranks that do not already host a replica of that expert.  Slot p lands
+    on rank ``p // (n_physical // n_ranks)``.
+    """
+    loads = np.asarray(loads, np.float64).reshape(-1)
+    E = loads.shape[0]
+    assert n_physical >= E, (n_physical, E)
+    assert n_physical % n_ranks == 0, (n_physical, n_ranks)
+    eps = n_physical // n_ranks
+    if not loads.any():
+        loads = np.ones(E, np.float64)
+    reps = np.ones(E, np.int64)
+    for _ in range(n_physical - E):
+        reps[int(np.argmax(loads / reps))] += 1
+    items = sorted(((loads[e] / reps[e], e, j)
+                    for e in range(E) for j in range(int(reps[e]))),
+                   key=lambda it: (-it[0], it[1], it[2]))
+    rank_load = np.zeros(n_ranks, np.float64)
+    rank_free = np.full(n_ranks, eps, np.int64)
+    rank_slots: list[list[int]] = [[] for _ in range(n_ranks)]
+    for share, e, _j in items:
+        best, best_key = -1, None
+        for r in range(n_ranks):
+            if not rank_free[r]:
+                continue
+            k = (e in rank_slots[r], rank_load[r], r)
+            if best_key is None or k < best_key:
+                best, best_key = r, k
+        rank_slots[best].append(e)
+        rank_load[best] += share
+        rank_free[best] -= 1
+    return placement_from_table(np.concatenate(
+        [np.asarray(s, np.int32) for s in rank_slots]))
+
+
+def split_to_physical(placement: Placement, top_idx: Array) -> Array:
+    """Deterministic replica split of a logical routing table.
+
+    Each valid choice of expert ``e`` goes to replica ``arrival_rank %
+    n_replicas[e]`` — round-robin in arrival order, the same dual-dialect
+    :func:`rank_in_group` every plan derives slots from, so numpy and jnp
+    produce bit-identical physical tables.  Identity placements return
+    ``top_idx`` unchanged (the replicas=1 bit-identity contract: no new ops
+    enter the traced graph).  -1 pads pass through.
+    """
+    if placement.is_identity:
+        return top_idx
+    xp = _xp(top_idx)
+    flat = top_idx.reshape(-1)
+    fv = flat >= 0
+    rk = rank_in_group(flat, placement.n_logical, fv)
+    e_safe = xp.where(fv, flat, 0)
+    rep = rk % xp.asarray(placement.n_replicas)[e_safe]
+    phys = xp.asarray(placement.logical_to_phys)[e_safe, rep]
+    return xp.where(fv, phys, flat).reshape(top_idx.shape).astype(
+        top_idx.dtype)
+
+
+def split_to_physical_world(placement: Placement, top_idx: Array) -> Array:
+    """(R, T, K) world-table split: every source rank round-robins its own
+    choices independently — identical to stacking per-source
+    :func:`split_to_physical`, in one vectorized pass (the offset trick
+    :func:`make_world_plan` uses)."""
+    if placement.is_identity:
+        return top_idx
+    xp = _xp(top_idx)
+    R, E = top_idx.shape[0], placement.n_logical
+    valid = top_idx >= 0
+    r_of = xp.arange(R, dtype=top_idx.dtype).reshape(
+        (R,) + (1,) * (top_idx.ndim - 1))
+    gid = xp.where(valid, top_idx + r_of * E, -1)
+    rk = rank_in_group(gid.reshape(-1), R * E,
+                       valid.reshape(-1)).reshape(top_idx.shape)
+    e_safe = xp.where(valid, top_idx, 0)
+    rep = rk % xp.asarray(placement.n_replicas)[e_safe]
+    phys = xp.asarray(placement.logical_to_phys)[e_safe, rep]
+    return xp.where(valid, phys, top_idx).astype(top_idx.dtype)
+
+
+# ------------------------------------------------------- load accounting --
+def expert_load(top_idx: Array, n_experts: int) -> Array:
+    """Per-expert valid routed-choice counts as float32 — the one ``load``
+    stat every router/backend/balancer reads (moe.py's three one_hot sums
+    and the bias updater all route through here)."""
+    flat = top_idx.reshape(-1)
+    c = group_counts(flat, n_experts, flat >= 0)
+    if _is_np(top_idx):
+        return c.astype(np.float32)
+    import jax.numpy as jnp
+    return c.astype(jnp.float32)
+
+
+def load_imbalance(counts: Array):
+    """max/mean load over the physical slots (1.0 = perfectly balanced;
+    1.0 also for an empty table).  Dual-dialect: float for numpy counts,
+    jnp scalar for traced ones."""
+    if _is_np(counts):
+        c = np.asarray(counts, np.float64)
+        m = float(c.mean()) if c.size else 0.0
+        return float(c.max() / m) if m > 0 else 1.0
+    import jax.numpy as jnp
+    c = counts.astype(jnp.float32)
+    m = c.mean()
+    return jnp.where(m > 0, c.max() / jnp.maximum(m, 1e-9), jnp.float32(1.0))
+
+
 # ------------------------------------------------------------ dedup table --
 def dedup_first(group_of: Array, valid: Array) -> Array:
     """First-occurrence mask per (token, group) across the K choices.

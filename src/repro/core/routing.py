@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MoEConfig
+from repro.core import plan as planlib
 
 Array = jax.Array
 
@@ -68,7 +69,7 @@ def update_aux_free_bias(p: RouterParams, out: RouterOut, n_experts_real: int,
     if p.bias is None:
         return p
     e_pad = p.bias.shape[0]
-    load = jax.nn.one_hot(out.top_idx, e_pad, dtype=jnp.float32).sum((0, 1))
+    load = planlib.expert_load(out.top_idx, e_pad)
     target = load.sum() / n_experts_real
     err = jnp.where(jnp.arange(e_pad) < n_experts_real, target - load, 0.0)
     return p._replace(bias=p.bias + lr * jnp.sign(err))

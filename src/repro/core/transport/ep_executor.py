@@ -259,6 +259,7 @@ class EPWorld:
         self.mems: list[SymmetricMemory] = []
         self._dirty = False
         self.timeline: dict = {}
+        self._ret_deliver: list = [dict() for _ in range(self.n_ranks)]
 
     # ------------------------------------------------------------ setup ----
     def _make_world(self, total_bytes: int, n_counters: int):
@@ -291,17 +292,32 @@ class EPWorld:
         if tl["first_compute_us"] is None:
             tl["first_compute_us"] = t
 
-    def _watch_dispatch(self, lo: int, hi: int):
+    def _watch_dispatch(self, lo: int, hi: int,
+                        ret_region: Optional[tuple] = None):
         """Record, on the event clock, when each dispatch write (a payload
         write into the receive region [lo, hi)) is delivered — the overlap
         metric compares the last of these against the first compute — and
         accumulate its exact wire-byte footprint (payload, and payload +
         header + per-sub-write metadata), the counters the compression
-        benchmarks gate on."""
+        benchmarks gate on.
+
+        ``ret_region`` = (ret0, ret_hi, row_bytes): additionally record,
+        per destination rank, the delivery time of every combine-return
+        sub-write by its return-slot index — the raw material for the
+        per-token completion clock (a token is done when the last of its
+        choices' return rows has landed; see ``token_completion_us``).
+        """
         cfg = self.net.cfg
+        ret_t: Optional[list] = None
+        if ret_region is not None:
+            r0, r1, rb = ret_region
+            ret_t = [dict() for _ in range(self.n_ranks)]
+            self._ret_deliver = ret_t
 
         def hook(msg):
-            if msg.kind == "write" and lo <= msg.dst_off < hi:
+            if msg.kind != "write":
+                return
+            if lo <= msg.dst_off < hi:
                 tl = self.timeline
                 tl["last_dispatch_write_us"] = max(
                     tl["last_dispatch_write_us"], msg.deliver_t)
@@ -309,7 +325,22 @@ class EPWorld:
                 tl["dispatch_wire_bytes"] += msg.size + cfg.hdr_bytes \
                     + (msg.n_writes - 1) * cfg.sub_hdr_bytes
                 tl["dispatch_msgs"] += 1
+            elif ret_t is not None and r0 <= msg.dst_off < r1:
+                d = ret_t[msg.dst]
+                offs = (msg.sub_off if msg.sub_off is not None
+                        else (msg.dst_off,))
+                for o in offs:
+                    d[(int(o) - r0) // rb] = msg.deliver_t
         self.net.on_deliver_hook = hook
+
+    def _completion_from_returns(self, r: int, n_slots: int) -> np.ndarray:
+        """(n_slots,) delivery time per return slot at rank r (0 = never)."""
+        slot_t = np.zeros(n_slots)
+        d = self._ret_deliver[r]
+        if d:
+            idx = np.fromiter(d.keys(), np.int64, len(d))
+            slot_t[idx] = np.fromiter(d.values(), np.float64, len(d))
+        return slot_t
 
     def _finish_timeline(self):
         tl = self.timeline
@@ -379,7 +410,7 @@ class EPWorld:
             p.register_table(*cs.guard_table)
 
         self._reset_timeline()
-        self._watch_dispatch(recv0, out0)
+        self._watch_dispatch(recv0, out0, ret_region=(ret0, total, tb))
 
         # ---- readiness state machine: expert e is ready once the fence of
         # every contributing source has applied at its destination ----------
@@ -457,6 +488,7 @@ class EPWorld:
         # the return region is expert-major (coalescable combine runs);
         # gather each (token, choice)'s partial back through ret_pos
         out = np.zeros((R, Tl, D), np.float64)
+        comp = np.zeros((R, Tl))
         for r in range(R):
             ret = _from_bytes(mems[r].data[ret0:ret0 + Tl * K * tb],
                               (Tl * K, D))
@@ -464,6 +496,14 @@ class EPWorld:
             out[r] = np.einsum("tkd,tk->td", g.astype(np.float64),
                                np.where(wp.valid[r], top_w[r], 0.0)
                                .astype(np.float64))
+            # event-clock completion per token: the last of its choices'
+            # combine-return deliveries, mapped through the same ret_pos
+            # the reduce gathers with (invalid choices contribute nothing)
+            slot_t = self._completion_from_returns(r, Tl * K)
+            per_choice = np.where(np.asarray(wp.valid[r]),
+                                  slot_t[np.asarray(cs.ret_pos[r])], 0.0)
+            comp[r] = per_choice.max(axis=1) if K else 0.0
+        self.timeline["token_completion_us"] = comp
         return out.astype(np.float32)
 
     def _grouped_compute(self, mems, wp, expert_fn, wg, wu, wd, recv0, out0):
@@ -548,7 +588,7 @@ class EPWorld:
 
         self._reset_timeline()
         self.timeline["n_chunks"] = n_chunks
-        self._watch_dispatch(recv0, comb0)
+        self._watch_dispatch(recv0, comb0, ret_region=(ret0, total, tb))
 
         # ---- per-source dedup plans + payload staging --------------------
         valid = top_idx >= 0
@@ -640,10 +680,16 @@ class EPWorld:
 
         # ---- global reduce at the source: sum the per-destination partials
         out = np.zeros((R, Tl, D), np.float64)
+        comp = np.zeros((R, Tl))
         for r in range(R):
             ts, gs, slots, _ = plans[r]
             ret = _from_bytes(mems[r].data[ret0:total], (R * C, D))
             np.add.at(out[r], ts, ret[gs * C + slots].astype(np.float64))
+            # token completion = last return-entry delivery among its
+            # (token, destination) entries
+            slot_t = self._completion_from_returns(r, R * C)
+            np.maximum.at(comp[r], ts, slot_t[gs * C + slots])
+        self.timeline["token_completion_us"] = comp
         return out.astype(np.float32)
 
     def _bucket_partials(self, g: int, toks, eids, ws, expert_fn,

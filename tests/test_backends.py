@@ -143,3 +143,121 @@ def test_moe_apply_simulated_rdma_matches_default():
     np.testing.assert_allclose(np.asarray(y_sim), np.asarray(y_ref),
                                rtol=3e-4, atol=3e-5)
     assert float(aux["dropped"]) == 0.0
+
+
+@pytest.mark.parametrize("net", ["rc", "srd"])
+@pytest.mark.parametrize("mode", ["ll", "ht"])
+@pytest.mark.parametrize("factor", [1, 2, 4])
+def test_backends_replicated_placement_equivalence(mode, net, factor):
+    """Replicated expert groups: both backends consume the same replicated
+    placement (one logical expert -> ``factor`` physical slots), split
+    tokens deterministically across replicas, and still match the LOGICAL
+    dense oracle — replication must be output-invariant."""
+    from repro.core import plan as planlib
+    from repro.core.transport.simulator import NetConfig
+
+    e, k, t = 8, 2, 32
+    x, ti, tw, wg, wu, wd = _problem(2, e, k, t)
+    pl = planlib.replicate_uniform(e, factor)
+    p2l = np.asarray(pl.phys_to_logical)
+    # physical expert weights: slot p holds logical expert p2l[p]'s rows
+    wg_p, wu_p, wd_p = wg[p2l], wu[p2l], wd[p2l]
+
+    spec = EPSpec(axes=("model",), sizes=(1,), n_experts=e, top_k=k,
+                  capacity_factor=8.0, dtype=jnp.float32, mode=mode,
+                  placement=tuple(int(v) for v in p2l))
+    assert spec.n_physical == e * factor
+    jb = get_backend("jax_collectives")
+
+    def island(x, ti, tw):
+        r = jb.dispatch_combine(
+            spec, x, ti, tw,
+            lambda b, counts=None: grouped_swiglu_ref(b, wg_p, wu_p, wd_p,
+                                                      counts=counts))
+        return r.out, r.aux["dropped"], r.aux["imbalance"]
+
+    out_jax, dropped, imb = jax.jit(jax.shard_map(
+        island, mesh=_mesh11(), in_specs=(P(),) * 3,
+        out_specs=(P(), P(), P()), check_vma=False))(x, ti, tw)
+    assert float(dropped) == 0.0
+    assert float(imb) >= 1.0          # max/mean physical-slot load
+
+    spec_sim = EPSpec(axes=("sim",), sizes=(4,), n_experts=e, top_k=k,
+                      mode=mode, chunks=2,
+                      placement=tuple(int(v) for v in p2l))
+    sb = get_backend("simulated_rdma",
+                     net_cfg=NetConfig(mode=net, seed=2, reorder_window=64))
+    wg_n, wu_n, wd_n = (np.asarray(w, np.float32)
+                        for w in (wg_p, wu_p, wd_p))
+    res_sim = sb.dispatch_combine(
+        spec_sim, np.asarray(x), np.asarray(ti), np.asarray(tw),
+        lambda toks, counts=None: np_grouped_swiglu(toks, wg_n, wu_n, wd_n,
+                                                    counts=counts))
+    assert float(res_sim.aux["imbalance"]) >= 1.0
+    assert res_sim.aux["load_phys"].shape == (e * factor,)
+
+    ref = np.asarray(moe_ref(x, ti, tw, wg, wu, wd))   # LOGICAL oracle
+    np.testing.assert_allclose(np.asarray(out_jax), ref, rtol=3e-4,
+                               atol=3e-5)
+    np.testing.assert_allclose(res_sim.out, ref, rtol=3e-4, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(out_jax), res_sim.out, rtol=3e-4,
+                               atol=3e-5)
+
+
+@pytest.mark.parametrize("mode", ["ll", "ht"])
+def test_replicas_one_is_bit_identical(mode):
+    """The replicas=1 degenerate case: an identity placement must produce
+    BIT-identical outputs to a placement-free spec on both backends (the
+    pinned contract — replication must not perturb the existing path)."""
+    from repro.core.transport.simulator import NetConfig
+
+    e, k, t = 8, 2, 32
+    x, ti, tw, wg, wu, wd = _problem(3, e, k, t)
+    outs = {}
+    for placement in (None, tuple(range(e))):
+        spec = EPSpec(axes=("model",), sizes=(1,), n_experts=e, top_k=k,
+                      capacity_factor=8.0, dtype=jnp.float32, mode=mode,
+                      placement=placement)
+        jb = get_backend("jax_collectives")
+
+        def island(x, ti, tw):
+            return jb.dispatch_combine(
+                spec, x, ti, tw,
+                lambda b, counts=None: grouped_swiglu_ref(
+                    b, wg, wu, wd, counts=counts)).out
+
+        out_jax = jax.jit(jax.shard_map(
+            island, mesh=_mesh11(), in_specs=(P(),) * 3, out_specs=P(),
+            check_vma=False))(x, ti, tw)
+
+        spec_sim = EPSpec(axes=("sim",), sizes=(4,), n_experts=e, top_k=k,
+                          mode=mode, chunks=2, placement=placement)
+        sb = get_backend("simulated_rdma",
+                         net_cfg=NetConfig(mode="srd", seed=3))
+        wg_n, wu_n, wd_n = (np.asarray(w, np.float32)
+                            for w in (wg, wu, wd))
+        res = sb.dispatch_combine(
+            spec_sim, np.asarray(x), np.asarray(ti), np.asarray(tw),
+            lambda toks, counts=None: np_grouped_swiglu(
+                toks, wg_n, wu_n, wd_n, counts=counts))
+        outs[placement is None] = (np.asarray(out_jax), res.out)
+
+    # bit identity, not allclose: same ops, same order, same bytes
+    np.testing.assert_array_equal(outs[True][0], outs[False][0])
+    np.testing.assert_array_equal(outs[True][1], outs[False][1])
+
+
+def test_moe_apply_surfaces_imbalance_every_branch():
+    """Satellite: aux["imbalance"] (max/mean physical-slot load) comes out
+    of the ref path, the host-sim path and the backend seam alike."""
+    from repro.configs import get_config, reduced_config
+    from repro.core.moe import moe_apply, moe_init
+
+    cfg = reduced_config(get_config("qwen2_moe_a2_7b"), n_layers=2,
+                         d_model=32, n_experts=4)
+    p = moe_init(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32), jnp.float32)
+    for kwargs in ({"mode": "ref"},
+                   {"mode": "ht", "backend": "simulated_rdma"}):
+        _, aux = moe_apply(cfg, None, p, x, **kwargs)
+        assert float(aux["imbalance"]) >= 1.0, kwargs

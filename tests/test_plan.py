@@ -83,3 +83,102 @@ def test_dedup_entry_table_np_jnp_identical(seed):
         groups = grp[t_i][valid[t_i]]
         firsts = grp[t_i][f_np[t_i]]
         assert sorted(set(groups.tolist())) == sorted(firsts.tolist())
+
+
+# ============================================== replicated placements ====
+def test_identity_placement_split_is_noop():
+    ti = _random_table(0)
+    ident = planlib.identity_placement(8)
+    assert ident.is_identity
+    out = planlib.split_to_physical(ident, ti)
+    assert out is ti                 # replicas=1 contract: no new ops at all
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("factor", [2, 4])
+def test_split_np_jnp_identical(seed, factor):
+    ti = _random_table(seed, t=64, k=3, e=8)
+    pl = planlib.replicate_uniform(8, factor)
+    s_np = planlib.split_to_physical(pl, ti)
+    s_j = planlib.split_to_physical(pl, jnp.asarray(ti))
+    np.testing.assert_array_equal(s_np, np.asarray(s_j))
+
+
+@pytest.mark.parametrize("seed", [0, 4])
+def test_split_preserves_logical_routing(seed):
+    ti = _random_table(seed, t=64, k=3, e=8)
+    pl = planlib.replicate_uniform(8, 2)
+    phys = planlib.split_to_physical(pl, ti)
+    v = ti >= 0
+    # -1 pads pass through; valid choices land on a replica of their expert
+    np.testing.assert_array_equal(phys[~v], ti[~v])
+    np.testing.assert_array_equal(
+        np.asarray(pl.phys_to_logical)[phys[v]], ti[v])
+
+
+def test_split_round_robin_balances_replicas():
+    e, reps, n = 4, 2, 40
+    ti = np.tile(np.arange(e, dtype=np.int32), n).reshape(-1, 1)
+    pl = planlib.replicate_uniform(e, reps)
+    phys = planlib.split_to_physical(pl, ti).reshape(-1)
+    counts = planlib.group_counts(phys, pl.n_physical, phys >= 0)
+    # each expert's arrivals split exactly evenly across its replicas
+    np.testing.assert_array_equal(counts, np.full(pl.n_physical, n // reps))
+
+
+def test_split_world_matches_stacked_per_source_splits():
+    rng = np.random.default_rng(9)
+    R, T, K, E = 3, 16, 2, 8
+    ti = rng.integers(0, E, size=(R, T, K)).astype(np.int32)
+    pl = planlib.replicate_uniform(E, 2)
+    world = planlib.split_to_physical_world(pl, ti)
+    for r in range(R):
+        np.testing.assert_array_equal(
+            world[r], planlib.split_to_physical(pl, ti[r]))
+
+
+def test_placement_from_table_roundtrip():
+    p2l = np.array([0, 2, 1, 0, 2, 1], np.int32)
+    pl = planlib.placement_from_table(p2l)
+    np.testing.assert_array_equal(pl.phys_to_logical, p2l)
+    np.testing.assert_array_equal(pl.n_replicas, [2, 2, 2])
+    # replica order is ascending physical id
+    for e in range(3):
+        slots = pl.logical_to_phys[e][pl.logical_to_phys[e] >= 0]
+        assert (np.diff(slots) > 0).all()
+        np.testing.assert_array_equal(np.asarray(pl.phys_to_logical)[slots],
+                                      e)
+
+
+@pytest.mark.parametrize("n_physical,n_ranks", [(8, 4), (12, 4), (16, 4)])
+def test_greedy_placement_invariants(n_physical, n_ranks):
+    loads = np.array([100.0, 40, 10, 5, 2, 1, 1, 1])
+    pl = planlib.greedy_placement(loads, n_physical, n_ranks)
+    assert pl.n_physical == n_physical
+    # every logical expert keeps at least one replica
+    assert set(np.asarray(pl.phys_to_logical)) == set(range(8))
+    # the hottest expert holds the (joint-)max replica count
+    reps = np.asarray(pl.n_replicas)
+    assert reps[0] == reps.max()
+    # greedy packing stays within the LPT-style bound of the optimum's
+    # lower bound (max single share, or the perfectly even split)
+    share = loads[pl.phys_to_logical] / reps[pl.phys_to_logical]
+    per_rank = share.reshape(n_ranks, -1).sum(1)
+    opt_lb = max(share.max(), share.sum() / n_ranks)
+    assert per_rank.max() <= 4.0 / 3.0 * opt_lb + 1e-9
+
+
+def test_load_imbalance_math():
+    assert planlib.load_imbalance(np.array([4.0, 4, 4, 4])) == 1.0
+    assert planlib.load_imbalance(np.array([8.0, 0, 0, 0])) == 4.0
+    assert planlib.load_imbalance(np.zeros(4)) == 1.0
+    j = planlib.load_imbalance(jnp.array([8.0, 0, 0, 0]))
+    assert float(j) == 4.0
+
+
+def test_expert_load_matches_one_hot_sum():
+    ti = _random_table(2, t=32, k=3, e=8)
+    load = planlib.expert_load(jnp.asarray(ti), 8)
+    ref = jnp.where(jnp.asarray(ti)[..., None] == jnp.arange(8), 1.0,
+                    0.0).sum((0, 1))
+    np.testing.assert_allclose(np.asarray(load), np.asarray(ref))

@@ -1,0 +1,244 @@
+"""Online expert re-placement + rank-degradation recovery (DESIGN.md §15).
+
+Covers the expert-level elasticity path: the sliding-window LoadBalancer,
+greedy re-placement, weight migration through the transport substrate
+(coalesced, fenced bulk writes), and the degraded-rank drill — a
+FailureInjector kills a rank mid-run, the SAME re-placement code path moves
+its experts onto the survivors, and the post-recovery world must quiesce
+cleanly and agree with the dense oracle.
+"""
+import numpy as np
+import pytest
+
+from repro.core import plan as planlib
+from repro.core.transport.ep_executor import EPWorld, np_grouped_swiglu
+from repro.core.transport.simulator import NetConfig
+from repro.distributed.elastic import (LoadBalancer, MigrationStats,
+                                       migrate_expert_weights)
+from repro.distributed.fault import FailureInjector
+
+
+def _weights(rng, e, d, f):
+    wg = rng.standard_normal((e, d, f)).astype(np.float32) / np.sqrt(d)
+    wu = rng.standard_normal((e, d, f)).astype(np.float32) / np.sqrt(d)
+    wd = rng.standard_normal((e, f, d)).astype(np.float32) / np.sqrt(f)
+    return wg, wu, wd
+
+
+def _pack_rows(wg, wu, wd):
+    """(E, Wb) uint8 checkpoint rows: each logical expert's wg|wu|wd."""
+    e = wg.shape[0]
+    flat = np.concatenate([wg.reshape(e, -1), wu.reshape(e, -1),
+                           wd.reshape(e, -1)], axis=1).astype(np.float32)
+    return np.ascontiguousarray(flat).view(np.uint8).reshape(e, -1)
+
+
+def _unpack_tables(tables, d, f):
+    """(R, eps, Wb) uint8 -> physical (wg, wu, wd) stacked over slots."""
+    r, eps, wb = tables.shape
+    rows = tables.reshape(r * eps, wb).view(np.float32)
+    n = d * f
+    wg = rows[:, :n].reshape(-1, d, f)
+    wu = rows[:, n:2 * n].reshape(-1, d, f)
+    wd = rows[:, 2 * n:].reshape(-1, f, d)
+    return wg, wu, wd
+
+
+# ================================================== LoadBalancer policy ==
+class TestLoadBalancer:
+    def test_initial_placement_covers_all_experts(self):
+        lb = LoadBalancer(n_logical=8, n_ranks=4, slots_per_rank=3)
+        p = lb.placement
+        assert p.n_physical == 12
+        assert set(np.asarray(p.phys_to_logical)) == set(range(8))
+        assert int(p.n_replicas.sum()) == 12
+
+    def test_no_replace_below_threshold(self):
+        lb = LoadBalancer(n_logical=8, n_ranks=4, slots_per_rank=2,
+                          interval=1, threshold=1.25)
+        lb.observe(np.ones(8))
+        assert lb.maybe_replace() is None
+
+    def test_no_replace_off_interval(self):
+        lb = LoadBalancer(n_logical=8, n_ranks=4, slots_per_rank=4,
+                          interval=4, threshold=1.0)
+        skew = np.array([100.0, 1, 1, 1, 1, 1, 1, 1])
+        for i in range(1, 4):
+            lb.observe(skew)
+            assert lb.maybe_replace() is None, i   # steps 1..3: off cadence
+        lb.observe(skew)
+        assert lb.maybe_replace() is not None      # step 4: due + skewed
+
+    def test_hot_expert_gets_most_replicas(self):
+        lb = LoadBalancer(n_logical=8, n_ranks=4, slots_per_rank=4,
+                          interval=1, threshold=1.0)
+        lb.observe(np.array([100.0, 1, 1, 1, 1, 1, 1, 1]))
+        new = lb.maybe_replace()
+        assert new is not None
+        reps = np.asarray(new.n_replicas)
+        assert reps[0] == reps.max() and reps[0] > 1
+        # re-placement drops the windowed imbalance
+        assert lb.imbalance() < 100.0 / (108.0 / 8)
+
+    def test_replace_is_idempotent_on_stable_load(self):
+        lb = LoadBalancer(n_logical=8, n_ranks=4, slots_per_rank=4,
+                          interval=1, threshold=1.0)
+        lb.observe(np.array([50.0, 1, 1, 1, 1, 1, 1, 1]))
+        assert lb.maybe_replace() is not None
+        lb.observe(np.array([50.0, 1, 1, 1, 1, 1, 1, 1]))
+        assert lb.maybe_replace() is None          # same greedy answer
+
+    def test_window_slides(self):
+        lb = LoadBalancer(n_logical=4, n_ranks=2, slots_per_rank=2, window=2)
+        lb.observe([8.0, 0, 0, 0])
+        lb.observe([0.0, 4, 0, 0])
+        lb.observe([0.0, 0, 2, 0])                 # evicts the first
+        np.testing.assert_allclose(lb.window_load(), [0, 4, 2, 0])
+
+    def test_degrade_shares_replacement_code_path(self):
+        lb = LoadBalancer(n_logical=8, n_ranks=4, slots_per_rank=2)
+        p = lb.degrade(dead_rank=2)
+        assert lb.n_ranks == 3
+        assert p.n_physical % 3 == 0 and p.n_physical >= 8
+        assert set(np.asarray(p.phys_to_logical)) == set(range(8))
+
+
+# ===================================================== weight migration ==
+class TestMigration:
+    def test_rows_land_correctly_with_coalescing(self):
+        rng = np.random.default_rng(3)
+        e, wb = 8, 1024
+        w_full = rng.integers(0, 256, size=(e, wb), dtype=np.uint8)
+        new = planlib.replicate_uniform(e, 2)      # 16 slots over 4 ranks
+        holdings = [[0, 1], [2, 3], [4, 5], [6, 7]]
+        tables, st = migrate_expert_weights(holdings, new, w_full,
+                                            chunk_bytes=128)
+        eps = new.n_physical // 4
+        for p in range(new.n_physical):
+            r, s = divmod(p, eps)
+            assert np.array_equal(tables[r, s],
+                                  w_full[int(new.phys_to_logical[p])])
+        # chunked contiguous runs coalesce into fewer wire messages
+        assert st.sub_writes == st.wire_slots * (wb // 128)
+        assert st.msgs < st.sub_writes
+        assert st.bytes_moved == st.wire_slots * wb
+        assert st.restored_slots == 0
+
+    def test_same_rank_moves_are_free(self):
+        rng = np.random.default_rng(4)
+        e, wb = 4, 256
+        w_full = rng.integers(0, 256, size=(e, wb), dtype=np.uint8)
+        ident = planlib.identity_placement(e)      # 4 slots over 2 ranks
+        holdings = [[0, 1], [2, 3]]
+        tables, st = migrate_expert_weights(holdings, ident, w_full)
+        assert st.wire_slots == 0 and st.bytes_moved == 0
+        assert st.local_slots == e
+        np.testing.assert_array_equal(
+            tables.reshape(e, wb), w_full)
+
+    def test_restore_path_when_no_holder_survives(self):
+        rng = np.random.default_rng(5)
+        e, wb = 4, 512
+        w_full = rng.integers(0, 256, size=(e, wb), dtype=np.uint8)
+        ident = planlib.identity_placement(e)
+        # nobody holds experts 2 and 3 -> checkpoint restore via rank 0
+        holdings = [[0, 1], []]
+        tables, st = migrate_expert_weights(holdings, ident, w_full)
+        assert st.restored_slots == 2
+        np.testing.assert_array_equal(tables.reshape(e, wb), w_full)
+
+    def test_rc_and_srd_agree(self):
+        rng = np.random.default_rng(6)
+        e, wb = 6, 768
+        w_full = rng.integers(0, 256, size=(e, wb), dtype=np.uint8)
+        new = planlib.greedy_placement(
+            np.array([9.0, 1, 1, 1, 1, 1]), 12, 3)
+        holdings = [[0, 1], [2, 3], [4, 5]]
+        outs = []
+        for mode in ("rc", "srd"):
+            t, st = migrate_expert_weights(
+                holdings, new, w_full, chunk_bytes=64,
+                net_cfg=NetConfig(mode=mode, seed=1, reorder_window=16))
+            assert isinstance(st, MigrationStats) and st.clock_us > 0
+            outs.append(t)
+        np.testing.assert_array_equal(outs[0], outs[1])
+
+
+# ========================================= degraded-rank recovery drill ==
+class TestDegradedRank:
+    def test_failure_injection_replace_quiesce_oracle(self):
+        """Rank 2 of 4 dies mid-run (FailureInjector); survivors re-place
+        the dead rank's experts via the LoadBalancer's shared code path,
+        migrate weights over the substrate, and the recovered world must
+        quiesce cleanly and agree with the dense oracle."""
+        R0, E, K, D, F = 4, 8, 2, 16, 12
+        T = 24                                    # divisible by 4 and by 3
+        rng = np.random.default_rng(11)
+        wg, wu, wd = _weights(rng, E, D, F)
+        w_full = _pack_rows(wg, wu, wd)
+        x = rng.standard_normal((T, D)).astype(np.float32)
+        ti = rng.integers(0, E, size=(T, K)).astype(np.int32)
+        tw = rng.random((T, K)).astype(np.float32)
+        tw /= tw.sum(1, keepdims=True)
+        want = EPWorld.oracle(x.reshape(1, T, D), ti.reshape(1, T, K),
+                              tw.reshape(1, T, K), wg, wu, wd
+                              ).reshape(T, D)
+
+        inj = FailureInjector(at_steps=(1,))
+        lb = LoadBalancer(n_logical=E, n_ranks=R0, slots_per_rank=E // R0,
+                          placement=planlib.identity_placement(E))
+        dead = 2
+        ranks, eps0 = R0, E // R0
+
+        def run_world(n_ranks, placement, wgp, wup, wdp):
+            world = EPWorld(n_ranks=n_ranks,
+                            n_experts=placement.n_physical, top_k=K, d=D,
+                            capacity=(T // n_ranks) * K,
+                            net_cfg=NetConfig(mode="srd", seed=7))
+            tis = planlib.split_to_physical_world(
+                placement, ti.reshape(n_ranks, T // n_ranks, K))
+            out = world.run(
+                x.reshape(n_ranks, T // n_ranks, D), tis,
+                tw.reshape(n_ranks, T // n_ranks, K),
+                expert_fn=lambda t, counts=None: np_grouped_swiglu(
+                    t, wgp, wup, wdp, counts=counts))
+            # clean quiesce: nothing in flight anywhere
+            assert not world.net.pending
+            assert not any(p.busy for p in world.proxies)
+            return out.reshape(T, D)
+
+        for step in range(3):
+            if inj(step):
+                # --- recovery: degrade onto survivors, migrate weights ----
+                new = lb.degrade(dead_rank=dead)
+                ranks = lb.n_ranks
+                # survivors keep relative order; the dead rank's holdings
+                # are gone -> its sole-replica experts hit the restore path
+                survivors = [r for r in range(R0) if r != dead]
+                holdings = [[r * eps0 + i for i in range(eps0)]
+                            for r in survivors]
+                tables, st = migrate_expert_weights(holdings, new, w_full,
+                                                    chunk_bytes=256)
+                assert st.restored_slots >= 1     # experts 4, 5 lost
+                wgp, wup, wdp = _unpack_tables(tables, D, F)
+                assert wgp.shape[0] == new.n_physical
+            if ranks == R0:
+                got = run_world(R0, lb.placement, wg, wu, wd)
+            else:
+                got = run_world(ranks, lb.placement, wgp, wup, wdp)
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+        assert inj.fired == {1} and ranks == R0 - 1
+
+    def test_degraded_world_rejects_dead_rank_traffic(self):
+        """After degrade, the new placement never maps a slot onto a rank
+        id >= the survivor count (renumbering invariant)."""
+        lb = LoadBalancer(n_logical=8, n_ranks=4, slots_per_rank=2)
+        new = lb.degrade(dead_rank=0)
+        eps = new.n_physical // lb.n_ranks
+        assert (np.asarray(new.logical_to_phys).max() <
+                lb.n_ranks * eps)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])
