@@ -1,31 +1,161 @@
-"""Paper Fig. 14: training throughput (tokens/s + achieved FLOP/s) for the
-HT EP path vs the dense bulk baseline on a reduced MoE model, 8 devices."""
+"""Paper Fig. 14: end-to-end training throughput at the flagship regime.
+
+Two sections, one per substrate:
+
+1. **Event-clock training-step pipeline** (host-side numpy, DeepSeek-V3
+   shaped: 256 routed experts, top-8, EP in {2,4,8}): a persistent EP
+   session runs L MoE layers per step through `EPWorld.run_step_serial`
+   (layer-quiesced baseline: push, drain, advance the non-MoE segment)
+   vs `EPWorld.run_step_pipelined` (cross-layer command batching + one
+   proxy drain per step + backward combine-grad streams overlapping the
+   non-MoE backward segments).  Both run the SAME session machinery and
+   produce bit-identical outputs; the A/B isolates cross-layer batching +
+   overlap.  Step times are exact deterministic event-clock numbers;
+   ``drains_per_step``/``cmds_per_drain`` are gated at exact equality
+   under ``fig14_training/counters/``, and the pipelined/serial speedup
+   at the flagship point (EP=8, L=4) is asserted same-session (>= 1.25x,
+   the direction of the paper's 45%-over-Megatron training headline).
+
+2. **jax fake-device mesh**: the reduced-model HT-vs-dense wall-clock rows
+   (legacy names, 1.25x gate) plus a flagship-shaped jax step (256 experts,
+   EP=8) — batches are pre-generated so the timed region measures the
+   train step only, not host-side synth_batch generation.
+"""
 import time
 
-import jax
+import numpy as np
 
-from benchmarks.common import emit
-from repro.configs import get_config, reduced_config
-from repro.data.pipeline import DataConfig, synth_batch
-from repro.distributed.sharding import make_dist_ctx
-from repro.launch.mesh import make_bench_mesh
-from repro.training.train_loop import HParams, init_state, make_train_step
+from benchmarks.common import emit, make_ep_problem
+
+# ---- flagship substrate regime (DeepSeek-V3 shaped) -----------------------
+# 256 routed experts, top-8; D/F reduced so the numpy FFN stays cheap while
+# wire bytes per token (D*4 = 128B payload) keep serialization realistic
+E, K, D, F, TL = 256, 8, 32, 64, 128
+CAP = 48                       # per-(src, expert) bucket capacity (no drops)
+# sweep: acceptance gates need drains_per_step == 1 for L in {2, 4} and the
+# speedup floor at the flagship point EP=8, L=4
+SWEEP = ((2, 4), (4, 4), (8, 2), (8, 4))
+FLAGSHIP = (8, 4)
+SPEEDUP_FLOOR = 1.25
+# non-MoE compute segments on the event clock (us): attention+norms forward,
+# and the roughly 2x backward; tuned so EP comm and backward compute are the
+# same order — the regime where overlap matters (and where the paper lives)
+NONMOE_FWD_US, NONMOE_BWD_US = 60.0, 120.0
 
 
-def run(moe_mode: str, steps: int = 4, B: int = 16, S: int = 128):
+def _net_cfg():
+    from repro.core.transport.simulator import NetConfig
+    # bandwidth low enough that per-layer EP traffic serializes into the
+    # ~100us range (comparable to the backward segments it must hide)
+    return NetConfig(mode="srd", seed=0, base_latency_us=2.0,
+                     bw_bytes_per_us=800.0)
+
+
+def _step_problem(R: int, L: int):
+    """Seeded per-layer EP problems + shared expert weights; asserts the
+    flagship routing fits capacity (n_dropped == 0)."""
+    xs, tis, tws = [], [], []
+    wg = wu = wd = None
+    for layer in range(L):
+        x, ti, tw, wg, wu, wd = make_ep_problem(100 + layer, R, E, K, D, F,
+                                                TL)
+        counts = np.zeros((R, E), np.int64)
+        for r in range(R):
+            np.add.at(counts[r], ti[r].reshape(-1), 1)
+        assert counts.max() <= CAP, "flagship routing overflows capacity"
+        xs.append(x)
+        tis.append(ti)
+        tws.append(tw)
+    occ = float(sum((t >= 0).sum() for t in tis)) / (L * E * CAP)
+    return xs, tis, tws, wg, wu, wd, occ
+
+
+def _make_session(R: int, L: int):
+    from repro.core.transport.ep_executor import EPWorld
+    return EPWorld(n_ranks=R, n_experts=E, top_k=K, d=D, f=F, capacity=CAP,
+                   net_cfg=_net_cfg(), session=True, n_layers=L, mirror=True)
+
+
+def run_substrate_point(R: int, L: int) -> dict:
+    """One sweep point: serial vs pipelined training step, same problem,
+    same session machinery, exact event-clock numbers."""
+    xs, tis, tws, wg, wu, wd, occ = _step_problem(R, L)
+    kw = dict(nonmoe_fwd_us=NONMOE_FWD_US, nonmoe_bwd_us=NONMOE_BWD_US)
+
+    ws = _make_session(R, L)
+    outs_s = ws.run_step_serial(xs, tis, tws, wg, wu, wd, **kw)
+    wp = _make_session(R, L)
+    outs_p = wp.run_step_pipelined(xs, tis, tws, wg, wu, wd, **kw)
+    for a, b in zip(outs_s, outs_p):
+        assert np.array_equal(a, b), "pipelined step changed the numerics"
+
+    ser, pip = ws.timeline, wp.timeline
+    assert pip["drains_per_step"] == 1, pip["drains_per_step"]
+    assert ser["drains_per_step"] == 2 * L, ser["drains_per_step"]
+    assert ser["cmds_per_step"] == pip["cmds_per_step"]
+    toks = R * TL
+    return {
+        "serial_us": ser["step_us"], "pipelined_us": pip["step_us"],
+        "speedup": ser["step_us"] / pip["step_us"],
+        "drains_serial": ser["drains_per_step"],
+        "drains_batched": pip["drains_per_step"],
+        "cmds_per_drain": pip["cmds_per_step"] // pip["drains_per_step"],
+        "tok_per_s": toks * 1e6 / pip["step_us"],
+        "occupancy": occ,
+    }
+
+
+def substrate_sweep():
+    for R, L in SWEEP:
+        s = run_substrate_point(R, L)
+        tag = f"ep{R}_L{L}"
+        emit(f"fig14_training/substrate/{tag}/serial", s["serial_us"],
+             f"drains={s['drains_serial']} event-clock")
+        emit(f"fig14_training/substrate/{tag}/pipelined", s["pipelined_us"],
+             f"speedup={s['speedup']:.2f}x tok_per_s={s['tok_per_s']:.0f} "
+             f"occupancy={s['occupancy']:.2f}")
+        # exact-gated counters: the L -> 1 drain collapse and the batched
+        # command volume are deterministic transport facts, not timings
+        emit(f"fig14_training/counters/{tag}_drains_batched",
+             s["drains_batched"], "exact")
+        emit(f"fig14_training/counters/{tag}_drains_serial",
+             s["drains_serial"], "exact")
+        emit(f"fig14_training/counters/{tag}_cmds_per_drain",
+             s["cmds_per_drain"], "exact")
+        if (R, L) == FLAGSHIP:
+            assert s["speedup"] >= SPEEDUP_FLOOR, (
+                f"cross-layer batching+overlap speedup {s['speedup']:.2f}x "
+                f"below the {SPEEDUP_FLOOR}x floor at EP={R}, L={L}")
+
+
+# ---- jax fake-device mesh section ----------------------------------------
+def run_jax(moe_mode: str, steps: int = 4, B: int = 16, S: int = 128,
+            n_experts: int = 8, d_model: int = 128, ep: int = 4,
+            vocab: int = 1024):
+    import jax
+
+    from repro.configs import get_config, reduced_config
+    from repro.data.pipeline import DataConfig, synth_batch
+    from repro.distributed.sharding import make_dist_ctx
+    from repro.launch.mesh import make_bench_mesh
+    from repro.training.train_loop import HParams, init_state, make_train_step
+
     cfg = reduced_config(get_config("moonshot_v1_16b_a3b"), n_layers=2,
-                         d_model=128, n_experts=8, vocab=1024)
-    mesh = make_bench_mesh(len(jax.devices()), model=4)
+                         d_model=d_model, n_experts=n_experts, vocab=vocab)
+    mesh = make_bench_mesh(len(jax.devices()), model=ep)
     dist = make_dist_ctx(cfg, mesh)
     hp = HParams(moe_mode=moe_mode, loss_chunk=S)
     state = init_state(cfg, jax.random.PRNGKey(0), dist=dist)
     step = make_train_step(cfg, hp, dist)
     dc = DataConfig(vocab_size=cfg.vocab_size, batch=B, seq_len=S, seed=0)
-    state, m = step(state, synth_batch(dc, 0))       # compile
+    # pre-generate every batch OUTSIDE the timed region: the benchmark
+    # measures the train step, not host-side synthetic data generation
+    batches = [synth_batch(dc, i) for i in range(steps + 1)]
+    state, m = step(state, batches[0])               # compile
     jax.block_until_ready(m["loss"])
     t0 = time.perf_counter()
     for i in range(1, steps + 1):
-        state, m = step(state, synth_batch(dc, i))
+        state, m = step(state, batches[i])
     jax.block_until_ready(m["loss"])
     dt = time.perf_counter() - t0
     toks = B * S * steps
@@ -34,13 +164,21 @@ def run(moe_mode: str, steps: int = 4, B: int = 16, S: int = 128):
 
 
 def main():
-    tput_ht, fl_ht = run("ht")
-    tput_ref, fl_ref = run("ref")
+    substrate_sweep()
+    tput_ht, fl_ht = run_jax("ht")
+    tput_ref, fl_ref = run_jax("ref")
     emit("fig14_training/uccl_ep_ht", 1e6 / tput_ht,
          f"tok_per_s={tput_ht:.0f} tflops={fl_ht/1e12:.3f} "
          f"vs_dense={tput_ht / tput_ref:.2f}x")
     emit("fig14_training/dense_baseline", 1e6 / tput_ref,
          f"tok_per_s={tput_ref:.0f} tflops={fl_ref/1e12:.3f}")
+    # flagship-shaped jax point: 256 routed experts at EP=8 on the
+    # fake-device mesh (dims reduced; the expert count and EP degree are
+    # the flagship parameters the XLA path must sustain)
+    tput_fs, fl_fs = run_jax("ht", steps=2, B=8, S=64, n_experts=256,
+                             d_model=64, ep=8, vocab=512)
+    emit("fig14_training/flagship_jax/ep8_e256", 1e6 / tput_fs,
+         f"tok_per_s={tput_fs:.0f} tflops={fl_fs/1e12:.3f}")
 
 
 if __name__ == "__main__":

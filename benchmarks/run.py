@@ -41,7 +41,7 @@ REGRESSION_SLACK_US = 100.0
 # speed) are gated at EXACT equality: any drift means the transport changed
 # behaviour, not that the machine was busy.
 EXACT_PREFIXES = ("fig17_counters/", "bench_transport/counters/",
-                  "fig16_ep_sweep/skew_clock/")
+                  "fig16_ep_sweep/skew_clock/", "fig14_training/counters/")
 # Wall-clock rows that flap 1.0-1.7x between back-to-back runs of
 # IDENTICAL code (real-thread benches contending for the host's cores;
 # the bench_transport scalar-vs-columnar A/B pair under CI load), so any

@@ -99,6 +99,20 @@ print(f"ci.sh: replicated-experts smoke OK "
       f"migrate {s['migrate_bytes']} bytes in {s['migrate_us']:.0f}us)")
 EOF
 
+# Training-step pipeline smoke (bounded fig14 point): the persistent-session
+# serial-vs-pipelined A/B at EP=8, L=2 must keep bit-identical outputs, the
+# exact L->1 drain collapse (drains_per_step: 2L -> 1), and a >=1.2x
+# event-clock win — the invariants the exact-gated fig14_training/counters
+# rows pin at the full flagship sweep.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+from benchmarks.fig14_training import run_substrate_point
+s = run_substrate_point(8, 2)
+assert s["drains_batched"] == 1 and s["drains_serial"] == 4, s
+assert s["speedup"] >= 1.2, s
+print(f"ci.sh: training-pipeline smoke OK (EP=8 L=2 "
+      f"{s['speedup']:.2f}x, drains {s['drains_serial']} -> 1)")
+EOF
+
 # Benchmark smoke: two host benchmarks end-to-end (fig15 FIFO stress +
 # the bench_transport batched-path microbench, whose counter rows are
 # exact-gated), plus the machine-readable results file the perf trajectory

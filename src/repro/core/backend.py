@@ -117,7 +117,8 @@ class SimulatedRDMABackend:
 
     def __init__(self, net_cfg=None, n_channels: int = 8,
                  use_threads: bool = False, n_threads: int = 4,
-                 columnar: bool = True, coalesce: bool = True):
+                 columnar: bool = True, coalesce: bool = True,
+                 session_layers: int = 0, session_mirror: bool = False):
         from repro.core.transport.simulator import NetConfig
         self.net_cfg = net_cfg or NetConfig(mode="srd", seed=0)
         self.n_channels = n_channels
@@ -129,7 +130,20 @@ class SimulatedRDMABackend:
         # oracle); coalesce=False disables RDMA write coalescing only
         self.columnar = columnar
         self.coalesce = coalesce
+        # session_layers > 0: persistent EP session (DESIGN §16) — ONE
+        # EPWorld per spec shape kept across dispatch_combine calls, guard
+        # tables/buckets/proxies registered once; call l mod session_layers
+        # routes to layer slot l, and the wrap to slot 0 begins a new step
+        self.session_layers = session_layers
+        self.session_mirror = session_mirror
+        self._sessions: dict = {}
+        self._layer_cursor = 0
         self.last_world = None      # exposed for stats/introspection
+
+    def begin_step(self):
+        """Realign the layer cursor (the next dispatch_combine is layer 0
+        of a fresh step).  Safe to call with no session configured."""
+        self._layer_cursor = 0
 
     def dispatch_combine(self, spec, x, top_idx, top_w, expert_fn):
         from repro.core.ep import DispatchResult
@@ -158,13 +172,36 @@ class SimulatedRDMABackend:
                 pl_obj = None
         E_phys = len(p_tab) if p_tab is not None else spec.n_experts
 
-        world = EPWorld(n_ranks=R, n_experts=E_phys, top_k=K, d=D,
-                        capacity=Tl * K, net_cfg=self.net_cfg,
-                        n_channels=self.n_channels,
-                        use_threads=self.use_threads,
-                        n_threads=self.n_threads,
-                        columnar=self.columnar, coalesce=self.coalesce,
-                        wire_dtype=getattr(spec, "wire_dtype", "fp32"))
+        wire_dtype = getattr(spec, "wire_dtype", "fp32")
+        layer = 0
+        if self.session_layers > 0:
+            # persistent session: one world per spec shape, reused across
+            # layers and steps; the cursor assigns layer slots in call
+            # order (the model calls its MoE layers in a fixed sequence)
+            skey = (spec.mode, R, E_phys, K, D, Tl, spec.chunks, wire_dtype)
+            world = self._sessions.get(skey)
+            if world is None:
+                world = EPWorld(n_ranks=R, n_experts=E_phys, top_k=K, d=D,
+                                capacity=Tl * K, net_cfg=self.net_cfg,
+                                n_channels=self.n_channels,
+                                columnar=self.columnar,
+                                coalesce=self.coalesce,
+                                wire_dtype=wire_dtype, session=True,
+                                n_layers=self.session_layers,
+                                mirror=self.session_mirror)
+                self._sessions[skey] = world
+            layer = self._layer_cursor % self.session_layers
+            self._layer_cursor += 1
+            if layer == 0:
+                world.begin_step()
+        else:
+            world = EPWorld(n_ranks=R, n_experts=E_phys, top_k=K, d=D,
+                            capacity=Tl * K, net_cfg=self.net_cfg,
+                            n_channels=self.n_channels,
+                            use_threads=self.use_threads,
+                            n_threads=self.n_threads,
+                            columnar=self.columnar, coalesce=self.coalesce,
+                            wire_dtype=wire_dtype)
         xs = x.reshape(R, Tl, D)
         tis = top_idx.reshape(R, Tl, K)
         tws = top_w.reshape(R, Tl, K)
@@ -175,9 +212,11 @@ class SimulatedRDMABackend:
             # literally on the substrate; capacity Tl per (src, dst) bucket
             # is lossless (a token crosses each rank boundary at most once)
             out = world.run_ht(xs, tis, tws, expert_fn=global_expert_fn,
-                               n_chunks=spec.chunks, capacity=Tl)
+                               n_chunks=spec.chunks, capacity=Tl,
+                               layer=layer)
         else:
-            out = world.run(xs, tis, tws, expert_fn=global_expert_fn)
+            out = world.run(xs, tis, tws, expert_fn=global_expert_fn,
+                            layer=layer)
         self.last_world = world
         flat = np.asarray(tis).reshape(-1)
         load_phys = planlib.group_counts(flat, E_phys, flat >= 0)

@@ -90,20 +90,25 @@ def make_ep_spec(cfg: ModelConfig, dist: DistCtx, *, mode: str,
 
 def moe_apply(cfg: ModelConfig, dist: Optional[DistCtx], p: dict, x: Array,
               *, mode: str = "ht", chunks: int = 1,
-              backend: Optional[str] = None) -> tuple[Array, dict]:
+              backend=None) -> tuple[Array, dict]:
     """x: (B, S, D) -> (y, aux).  mode: "ht" | "ll" | "ref".
 
     ``backend`` (default ``cfg.moe.ep_backend``) selects the EP transport
-    from the :mod:`repro.core.backend` registry.  ``simulated_rdma`` is a
-    host-side reference path (numpy over the transport substrate) — valid
-    outside ``jit`` only, for protocol cross-checks and debugging.
+    from the :mod:`repro.core.backend` registry — a registered name, or an
+    :class:`~repro.core.backend.EPBackend` *instance* (the persistent-
+    session path: a model passes ONE backend object to all its MoE layers
+    so guard tables/buckets/proxies register once per step, DESIGN §16).
+    ``simulated_rdma`` is a host-side reference path (numpy over the
+    transport substrate) — valid outside ``jit`` only, for protocol
+    cross-checks and debugging.
     """
     B, S, D = x.shape
     mcfg = cfg.moe
     e_pad = p["w_gate"].shape[0]
     rparams = RouterParams(w=p["router_w"], bias=p.get("router_b"))
     # fail loud on unknown names (get_backend raises), never fall back
-    ep_be = get_backend(backend or mcfg.ep_backend)
+    be = backend if backend is not None else mcfg.ep_backend
+    ep_be = get_backend(be) if isinstance(be, str) else be
 
     if not ep_be.jit_compatible and mode != "ref":
         y, aux = _moe_host_sim(cfg, dist, rparams, p, x, mode, ep_be)

@@ -122,22 +122,26 @@ def effective_chunks(T: int, chunks: int) -> int:
 
 
 def receive_bucket_table(n_buckets: int, base: int, stride: int,
-                         extent: Optional[int] = None,
+                         extent: Optional[int] = None, gid0: int = 0,
                          ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Receive-bucket registration table: ``(bases, extents, guard_ids)``.
 
     Bucket ``g`` occupies bytes ``[base + g*stride, base + g*stride +
-    extent)`` and owns guard id ``g`` — the table the EP executor registers
-    with each rank's proxy so the receiver can resolve a write's landing
-    offset to its completion-fence guard (DESIGN.md §12).  ``extent``
-    defaults to ``stride`` (densely packed buckets).  Guard ids double as
-    host counter indices, so the fence descriptor's ``dst_off`` addresses
-    both with one wide id.
+    extent)`` and owns guard id ``gid0 + g`` — the table the EP executor
+    registers with each rank's proxy so the receiver can resolve a write's
+    landing offset to its completion-fence guard (DESIGN.md §12).
+    ``extent`` defaults to ``stride`` (densely packed buckets).  Guard ids
+    double as host counter indices, so the fence descriptor's ``dst_off``
+    addresses both with one wide id.  ``gid0`` offsets the ids into a
+    per-layer namespace when several layers' tables coexist in one EP
+    session (DESIGN.md §16): layer l's buckets own ids
+    ``[l*stride_ids, l*stride_ids + n_buckets)`` and never alias another
+    layer's fences.
     """
     ext = stride if extent is None else extent
     assert 0 < ext <= stride, (extent, stride)
-    gids = np.arange(n_buckets, dtype=np.int64)
-    bases = base + gids * stride
+    gids = gid0 + np.arange(n_buckets, dtype=np.int64)
+    bases = base + np.arange(n_buckets, dtype=np.int64) * stride
     extents = np.full(n_buckets, ext, np.int64)
     return bases, extents, gids
 

@@ -75,11 +75,39 @@ class CommandStreams(NamedTuple):
     #                             source's final reduce gathers through it
 
 
+class SessSlot(NamedTuple):
+    """One layer's namespace inside a persistent EP session (DESIGN §16):
+    memory regions (``send0``/``recv0``/``mid0``/``ret0``/``end`` —
+    ``mid0`` is the LL expert-output region, or the HT combine region),
+    guard/counter id base ``guard0``, and the channel window
+    ``[ch0, ch0 + ncl)`` this layer's commands ride."""
+    send0: int
+    recv0: int
+    mid0: int
+    ret0: int
+    end: int
+    guard0: int
+    ch0: int
+    ncl: int
+
+
+class LayerPrep(NamedTuple):
+    """One prepared layer (or mirror) stream inside a session step."""
+    slot: int
+    cs: CommandStreams
+    tw: Optional[np.ndarray]
+    Tl: int
+    remaining: Optional[np.ndarray]
+
+
 def build_command_streams(top_idx: np.ndarray, n_experts: int, eps: int,
                           capacity: int, tok_bytes: int, n_channels: int,
                           send0: int, recv0: int, ret0: int,
                           wire_bytes: Optional[int] = None,
                           out0: Optional[int] = None,
+                          ch_base: int = 0,
+                          n_ch_eff: Optional[int] = None,
+                          guard_base: int = 0,
                           ) -> CommandStreams:
     """Vectorized LL-protocol command generation from a routing table.
 
@@ -106,9 +134,19 @@ def build_command_streams(top_idx: np.ndarray, n_experts: int, eps: int,
     (``tok_bytes``; the fp32-accumulation contract, DESIGN.md §14), sourced
     from the expert-output region at ``out0`` when given (the receive
     buckets hold wire-format rows, which expert outputs must not clobber).
+
+    ``ch_base``/``n_ch_eff``/``guard_base`` carve a per-layer namespace out
+    of the channel and guard/counter id spaces for the persistent EP
+    session (DESIGN.md §16): this layer's commands ride channels
+    ``[ch_base, ch_base + n_ch_eff)`` and its fences address guard ids
+    offset by ``guard_base``, so several layers' in-flight streams never
+    alias each other's wire seqs or completion fences.  Defaults are the
+    whole space (single-layer behaviour, bit-identical to before).
     """
     ti = np.ascontiguousarray(top_idx, np.int64)
     R, Tl, K = ti.shape
+    ncl = n_channels if n_ch_eff is None else n_ch_eff
+    assert 0 < ncl and ch_base + ncl <= n_channels, (ch_base, ncl)
     tb = tok_bytes
     wb = tok_bytes if wire_bytes is None else wire_bytes
     wp = planlib.make_world_plan(ti, n_experts, capacity)
@@ -132,7 +170,7 @@ def build_command_streams(top_idx: np.ndarray, n_experts: int, eps: int,
     # run, which is what the proxy's write coalescer turns into single
     # batched RDMA messages.  Sequence semantics don't care: LL writes
     # gate nothing, and seqs are assigned at drain time in stream order.
-    ch_w = np.where(wp.valid, ti % n_channels, 0)       # global expert key
+    ch_w = ch_base + np.where(wp.valid, ti % ncl, 0)    # global expert key
     writes = pack_cmds(int(Op.WRITE), dst, ch_w, src_off, recv_off, wb,
                        0)[valid]
     w_pusher = src_rank.reshape(-1)[valid]
@@ -168,24 +206,26 @@ def build_command_streams(top_idx: np.ndarray, n_experts: int, eps: int,
         combines[cperm], c_pusher[cperm], c_channel[cperm]
     entry_expert = ti.reshape(-1)[valid][cperm]
 
-    # fence for (src r, expert e): guard id == counter id == r*eps + el,
-    # the index of the (r, el) receive bucket in the registered table
+    # fence for (src r, expert e): guard id == counter id ==
+    # guard_base + r*eps + el, the index of the (r, el) receive bucket in
+    # the registered table (plus the layer's namespace base)
     r_f, e_f = np.nonzero(wp.counts > 0)
     el_f = e_f % eps
-    fences = pack_cmds(int(Op.ATOMIC), e_f // eps, e_f % n_channels,
-                       wp.counts[r_f, e_f], r_f * eps + el_f, 0, 0,
-                       FLAG_FENCE)
+    ch_f = ch_base + e_f % ncl
+    fences = pack_cmds(int(Op.ATOMIC), e_f // eps, ch_f,
+                       wp.counts[r_f, e_f], guard_base + r_f * eps + el_f,
+                       0, 0, FLAG_FENCE)
 
     return CommandStreams(
         plan=wp,
         writes=writes, write_pusher=w_pusher,
         write_channel=w_channel,
-        fences=fences, fence_pusher=r_f, fence_channel=e_f % n_channels,
+        fences=fences, fence_pusher=r_f, fence_channel=ch_f,
         combines=combines, combine_pusher=c_pusher,
         combine_channel=c_channel,
         entry_expert=entry_expert,
         guard_table=planlib.receive_bucket_table(
-            ti.shape[0] * eps, recv0, capacity * wb),
+            ti.shape[0] * eps, recv0, capacity * wb, gid0=guard_base),
         ret_pos=pos)
 
 
@@ -244,6 +284,17 @@ class EPWorld:
     # wire payload dtype for dispatch: "fp32" (passthrough) | "fp8" | "int8"
     # (block-quantized with inline scales; combines stay fp32 — DESIGN §14)
     wire_dtype: str = "fp32"
+    # ---- persistent EP session (DESIGN.md §16) ----------------------------
+    # session=True keeps ONE world alive across a model's MoE layers: guard
+    # tables, receive buckets, proxies and memory are registered once (at
+    # first use) and reused every step via begin_step(); each of n_layers
+    # layers owns a private memory slot plus a channel + guard/counter id
+    # namespace so concurrent layers never alias seqs or fences.  mirror=True
+    # doubles the slots: slot n_layers+l models layer l's backward
+    # combine-grad stream (same command shapes, no expert compute).
+    session: bool = False
+    n_layers: int = 1
+    mirror: bool = False
 
     def __post_init__(self):
         assert self.n_experts % self.n_ranks == 0
@@ -260,6 +311,19 @@ class EPWorld:
         self._dirty = False
         self.timeline: dict = {}
         self._ret_deliver: list = [dict() for _ in range(self.n_ranks)]
+        # session state (lazy; _session_layout allocates on first layer run)
+        assert not (self.session and self.use_threads), \
+            "session mode is inline-only (deterministic event clock)"
+        self._slots: Optional[list] = None
+        self._sess_mode: Optional[str] = None
+        self._sess_geom: Optional[tuple] = None
+        self._counter_stride = 0
+        self._slot_bytes = 0
+        self._slot_ready: dict[int, Callable] = {}   # slot -> fence handler
+        self._ready: list[Callable[[], None]] = []   # pending launch thunks
+        self._sret: dict[tuple, dict] = {}   # (slot, rank) -> {idx: t}
+        self._ret_left: dict[tuple, int] = {}        # outstanding returns
+        self._slot_done_cb: dict[int, Callable] = {}  # slot -> fn(rank, now)
 
     # ------------------------------------------------------------ setup ----
     def _make_world(self, total_bytes: int, n_counters: int):
@@ -283,7 +347,11 @@ class EPWorld:
                          # plus header/sub-write metadata, per the net cfg
                          "dispatch_payload_bytes": 0,
                          "dispatch_wire_bytes": 0,
-                         "dispatch_msgs": 0}
+                         "dispatch_msgs": 0,
+                         # cross-layer batching counters (exact-gated):
+                         # quiesce drains and commands pushed this step
+                         "drains_per_step": 0,
+                         "cmds_per_step": 0}
 
     def _note_compute(self, key):
         t = self.net.clock_us
@@ -333,10 +401,12 @@ class EPWorld:
                     d[(int(o) - r0) // rb] = msg.deliver_t
         self.net.on_deliver_hook = hook
 
-    def _completion_from_returns(self, r: int, n_slots: int) -> np.ndarray:
+    def _completion_from_returns(self, r: int, n_slots: int,
+                                 d: Optional[dict] = None) -> np.ndarray:
         """(n_slots,) delivery time per return slot at rank r (0 = never)."""
         slot_t = np.zeros(n_slots)
-        d = self._ret_deliver[r]
+        if d is None:
+            d = self._ret_deliver[r]
         if d:
             idx = np.fromiter(d.keys(), np.int64, len(d))
             slot_t[idx] = np.fromiter(d.values(), np.float64, len(d))
@@ -350,12 +420,455 @@ class EPWorld:
                                 - tl["first_compute_us"])
         self.net.on_deliver_hook = None
 
+    # ================================ persistent EP session (DESIGN §16) ==
+    @property
+    def n_slots(self) -> int:
+        return self.n_layers * (2 if self.mirror else 1)
+
+    def _session_layout(self, mode: str, Tl: int, K: int, C: int,
+                        n_chunks: int = 1):
+        """Lazily allocate the session world on first layer use: one memory
+        slot per layer (two with ``mirror`` — forward + backward stream),
+        ONE symmetric memory + proxy set for all of them, every slot's
+        receive-bucket guard table registered up front (the once-per-session
+        registration the real library amortizes), and a session-wide
+        readiness dispatcher + delivery watch installed for the whole
+        lifetime.  Geometry is pinned by the first call; later layers and
+        steps must match (one plan/stream cache key per EPSpec shape)."""
+        if self._slots is not None:
+            assert (self._sess_mode == mode
+                    and self._sess_geom == (Tl, K, C, n_chunks)), (
+                "session geometry pinned at first use: "
+                f"{self._sess_mode}/{self._sess_geom} vs "
+                f"{mode}/{(Tl, K, C, n_chunks)}")
+            return
+        assert self.session
+        R, eps, tb = self.n_ranks, self.eps, self.tok_bytes
+        wb = self.wire_tok_bytes
+        n_slots = self.n_slots
+        if mode == "ll":
+            sizes = (Tl * wb, R * eps * C * wb, R * eps * C * tb,
+                     Tl * K * tb)
+            stride = R * eps
+        else:
+            ent_b = wb + K * 8
+            sizes = (R * C * ent_b, R * C * ent_b, R * C * tb, R * C * tb)
+            stride = R * n_chunks
+        slot_bytes = sum(sizes)
+        # channel namespace: slots round-robin over disjoint channel groups
+        # (adjacent layers always land in different groups, so two layers'
+        # in-flight streams never share a wire seq space)
+        n_groups = min(n_slots, self.n_channels)
+        cpl = self.n_channels // n_groups
+        slots = []
+        for s in range(n_slots):
+            base = s * slot_bytes
+            offs = [base]
+            for sz in sizes[:-1]:
+                offs.append(offs[-1] + sz)
+            slots.append(SessSlot(send0=offs[0], recv0=offs[1],
+                                  mid0=offs[2], ret0=offs[3],
+                                  end=base + slot_bytes,
+                                  guard0=s * stride,
+                                  ch0=(s % n_groups) * cpl, ncl=cpl))
+        self._slots = slots
+        self._sess_mode = mode
+        self._sess_geom = (Tl, K, C, n_chunks)
+        self._counter_stride = stride
+        self._slot_bytes = slot_bytes
+        mems, proxies = self._make_world(n_slots * slot_bytes,
+                                         n_counters=n_slots * stride)
+        if mode == "ll":
+            # register EVERY slot's receive-bucket table with every proxy
+            # exactly once for the session's lifetime (the MR model);
+            # begin_step never re-registers — ControlBuffers are recreated
+            # per step but share this GuardTable by reference
+            for sl in slots:
+                tab = planlib.receive_bucket_table(R * eps, sl.recv0,
+                                                   C * wb, gid0=sl.guard0)
+                for p in proxies:
+                    p.register_table(*tab)
+        for d in range(R):
+            proxies[d].on_ready = \
+                lambda src, idx, v, d=d: self._sess_ready(d, src, idx, v)
+        self._install_session_watch()
+        self.begin_step()
+
+    def begin_step(self):
+        """Reset per-step transport state — counters, fence/seq bookkeeping,
+        per-step timeline — while KEEPING registered guard tables, receive
+        buckets, proxies, memory and the (monotonic) event clock.  The
+        session contract: registration happens once, steps only clear."""
+        assert self.session, "begin_step is a session-mode API"
+        if self._slots is None:
+            return                       # first run() initializes + resets
+        assert not self.net.pending, "begin_step with traffic in flight"
+        for p in self.proxies:
+            # per-src receiver bookkeeping (writes_seen, held fences, wire
+            # seqs) restarts each step; ControlBuffers are recreated lazily
+            # and share the proxy's registered GuardTable by reference
+            p.ctrl.clear()
+            p._seq.clear()               # sender seqs restart with them
+        for m in self.mems:
+            m.counters[:] = 0
+        self._slot_ready.clear()
+        self._ready.clear()
+        self._sret.clear()
+        self._ret_left.clear()
+        self._slot_done_cb.clear()
+        self._reset_timeline()
+
+    def _sess_ready(self, dst: int, src: int, idx: int, value: int):
+        """Session-wide readiness dispatcher: route a guarded-atomic apply
+        to its slot's handler by counter-id namespace."""
+        s = idx // self._counter_stride
+        h = self._slot_ready.get(s)
+        if h is not None:
+            h(dst, src, idx - s * self._counter_stride, value)
+
+    def _install_session_watch(self):
+        """Session delivery watch: classify every landed write by slot —
+        dispatch writes feed the wire-accounting counters, combine returns
+        feed per-(slot, rank) completion clocks AND the step pipeline's
+        done-callbacks (rank r finished layer l when its last return
+        lands)."""
+        cfg = self.net.cfg
+        sb = self._slot_bytes
+        slots = self._slots
+        tb = self.tok_bytes
+
+        def hook(msg):
+            if msg.kind != "write":
+                return
+            s = msg.dst_off // sb
+            sl = slots[s]
+            if sl.recv0 <= msg.dst_off < sl.mid0:
+                tl = self.timeline
+                tl["last_dispatch_write_us"] = max(
+                    tl["last_dispatch_write_us"], msg.deliver_t)
+                tl["dispatch_payload_bytes"] += msg.size
+                tl["dispatch_wire_bytes"] += msg.size + cfg.hdr_bytes \
+                    + (msg.n_writes - 1) * cfg.sub_hdr_bytes
+                tl["dispatch_msgs"] += 1
+            elif sl.ret0 <= msg.dst_off < sl.end:
+                d = self._sret.setdefault((s, msg.dst), {})
+                offs = (msg.sub_off if msg.sub_off is not None
+                        else (msg.dst_off,))
+                for o in offs:
+                    d[(int(o) - sl.ret0) // tb] = msg.deliver_t
+                key = (s, msg.dst)
+                left = self._ret_left.get(key)
+                if left is not None and left > 0:
+                    left -= len(offs)
+                    self._ret_left[key] = left
+                    if left == 0:
+                        cb = self._slot_done_cb.get(s)
+                        if cb is not None:
+                            cb(msg.dst, self.net.clock_us)
+        self.net.on_deliver_hook = hook
+
+    def _pump_sess(self):
+        """Drain the session to quiescence; readiness thunks queued by slot
+        handlers run interleaved with delivery (one drain per call)."""
+        self._pump_events(self.proxies, self._ready, lambda f: f())
+
+    # ---- shared LL pieces (one code path for isolated and session runs) ---
+    def _ll_launch_expert(self, e: int, cs: CommandStreams, wp, recv0: int,
+                          out0: int, wg, wu, wd, expert_fn, order, starts,
+                          slot: Optional[int] = None):
+        """Launch expert e for one LL stream: decode its receive buckets,
+        run its FFN, write fp32 outputs, push exactly its combine rows."""
+        mems = self.mems
+        E, eps, C, D = self.n_experts, self.eps, self.capacity, self.d
+        wb, tb = self.wire_tok_bytes, self.tok_bytes
+        d, el = divmod(e, eps)
+        cnts = np.asarray(wp.counts)[:, e]
+        srcs = np.flatnonzero(cnts)
+        self._note_compute(("ll", e) if slot is None else ("ll", slot, e))
+        bases = [recv0 + (int(r) * eps + el) * C * wb for r in srcs]
+        toks = self.codec.decode(np.concatenate(
+            [mems[d].data[b:b + int(cnts[r]) * wb]
+             for b, r in zip(bases, srcs)]).reshape(-1, wb), D)
+        if expert_fn is None:
+            out = np_swiglu(toks, wg[e], wu[e], wd[e])
+        else:
+            buf = np.zeros((E, len(toks), D), np.float32)
+            buf[e] = toks
+            cnt1 = np.zeros((E,), np.int32)
+            cnt1[e] = len(toks)
+            out = np.asarray(_call_expert_fn(expert_fn, buf, cnt1))[e]
+        out = np.ascontiguousarray(out,
+                                   np.float32).view(np.uint8).reshape(-1)
+        # write fp32 outputs into the expert-output region (slot-major per
+        # source, mirroring the bucket), then stream the combine writes for
+        # exactly this bucket
+        off = 0
+        for r in srcs:
+            ob = out0 + (int(r) * eps + el) * C * tb
+            n_b = int(cnts[r]) * tb
+            mems[d].data[ob:ob + n_b] = out[off:off + n_b]
+            off += n_b
+        rows = order[starts[e]:starts[e + 1]]
+        if len(rows):
+            self._push_grouped(cs.combines[rows],
+                               cs.combine_pusher[rows],
+                               cs.combine_channel[rows])
+
+    def _ll_reduce(self, cs: CommandStreams, wp, top_w, Tl: int, ret0: int,
+                   ret_deliver: list) -> tuple[np.ndarray, np.ndarray]:
+        """Weighted reduce at each source + per-token completion clock.
+        The return region is expert-major (coalescable combine runs);
+        gather each (token, choice)'s partial back through ret_pos."""
+        R, K, D, tb = self.n_ranks, self.top_k, self.d, self.tok_bytes
+        out = np.zeros((R, Tl, D), np.float64)
+        comp = np.zeros((R, Tl))
+        for r in range(R):
+            ret = _from_bytes(self.mems[r].data[ret0:ret0 + Tl * K * tb],
+                              (Tl * K, D))
+            g = ret[np.asarray(cs.ret_pos[r])]          # (Tl, K, D)
+            out[r] = np.einsum("tkd,tk->td", g.astype(np.float64),
+                               np.where(wp.valid[r], top_w[r], 0.0)
+                               .astype(np.float64))
+            # event-clock completion per token: the last of its choices'
+            # combine-return deliveries, mapped through the same ret_pos
+            # the reduce gathers with (invalid choices contribute nothing)
+            slot_t = self._completion_from_returns(r, Tl * K,
+                                                   ret_deliver[r])
+            per_choice = np.where(np.asarray(wp.valid[r]),
+                                  slot_t[np.asarray(cs.ret_pos[r])], 0.0)
+            comp[r] = per_choice.max(axis=1) if K else 0.0
+        return out.astype(np.float32), comp
+
+    # ---- session layer preparation / push / drivers -----------------------
+    def _prepare_ll(self, slot_idx: int, x_l, ti, tw, wg=None, wu=None,
+                    wd=None, *, expert_fn=None, launch_compute=True,
+                    ) -> LayerPrep:
+        """Stage one layer's tokens into its session slot, build its command
+        streams in the slot's channel/guard namespace, and register its
+        per-expert readiness handler (fences ready -> FFN + combine push;
+        with ``launch_compute=False`` — the mirrored backward stream — the
+        handler pushes the combine-grad rows without compute)."""
+        sl = self._slots[slot_idx]
+        R, Tl, K = ti.shape
+        C, E, eps = self.capacity, self.n_experts, self.eps
+        tb, wb = self.tok_bytes, self.wire_tok_bytes
+        assert (Tl, K) == self._sess_geom[:2]
+        if x_l is not None:
+            for r in range(R):
+                self.mems[r].data[sl.send0:sl.send0 + Tl * wb] = \
+                    self.codec.encode(np.ascontiguousarray(
+                        x_l[r], np.float32)).reshape(-1)
+        cs = build_command_streams(ti, E, eps, C, tb, self.n_channels,
+                                   sl.send0, sl.recv0, sl.ret0,
+                                   wire_bytes=wb, out0=sl.mid0,
+                                   ch_base=sl.ch0, n_ch_eff=sl.ncl,
+                                   guard_base=sl.guard0)
+        wp = cs.plan
+        assert int(wp.counts.max()) <= C, "capacity overflow in setup"
+        order = np.argsort(cs.entry_expert, kind="stable")
+        starts = np.searchsorted(cs.entry_expert[order], np.arange(E + 1))
+        remaining = (np.asarray(wp.counts) > 0).sum(axis=0).astype(np.int64)
+
+        if launch_compute:
+            def launch(e):
+                self._ll_launch_expert(e, cs, wp, sl.recv0, sl.mid0,
+                                       wg, wu, wd, expert_fn, order, starts,
+                                       slot=slot_idx)
+        else:
+            def launch(e):          # mirrored stream: traffic, no FFN
+                rows = order[starts[e]:starts[e + 1]]
+                if len(rows):
+                    self._push_grouped(cs.combines[rows],
+                                       cs.combine_pusher[rows],
+                                       cs.combine_channel[rows])
+
+        def on_fence(dst, src, idx_rel, operand):
+            e = dst * eps + (idx_rel - src * eps)
+            remaining[e] -= 1
+            if remaining[e] == 0:
+                self._ready.append(lambda e=e: launch(e))
+
+        self._slot_ready[slot_idx] = on_fence
+        valid = np.asarray(wp.valid)
+        for r in range(R):
+            self._ret_left[(slot_idx, r)] = int(valid[r].sum())
+        return LayerPrep(slot=slot_idx, cs=cs, tw=tw, Tl=Tl,
+                         remaining=remaining)
+
+    def _push_prep(self, prep: LayerPrep, rank: Optional[int] = None):
+        """Enqueue a prepared layer's dispatch writes + fences — all ranks,
+        or only the rows rank ``rank`` pushes (the per-rank pipeline)."""
+        cs = prep.cs
+        if rank is None:
+            self._push_grouped(cs.writes, cs.write_pusher, cs.write_channel)
+            self._push_grouped(cs.fences, cs.fence_pusher, cs.fence_channel)
+            ranks = range(self.n_ranks)
+        else:
+            wm = cs.write_pusher == rank
+            self._push_grouped(cs.writes[wm], cs.write_pusher[wm],
+                               cs.write_channel[wm])
+            fm = cs.fence_pusher == rank
+            self._push_grouped(cs.fences[fm], cs.fence_pusher[fm],
+                               cs.fence_channel[fm])
+            ranks = (rank,)
+        for r in ranks:
+            # a source with no valid routing entries gets no returns: its
+            # layer completes the moment its (empty) dispatch is enqueued
+            if self._ret_left.get((prep.slot, r)) == 0:
+                self._ret_left[(prep.slot, r)] = -1     # fire exactly once
+                cb = self._slot_done_cb.get(prep.slot)
+                if cb is not None:
+                    cb(r, self.net.clock_us)
+
+    def _run_layer_ll(self, layer: int, x, ti, tw, wg=None, wu=None,
+                      wd=None, *, expert_fn=None,
+                      overlap: Optional[bool] = None) -> np.ndarray:
+        """One LL layer inside the session (sequential mode: push, drain to
+        quiescence, reduce) — `run(..., layer=l)` routes here.  Bit-identical
+        math to an isolated `run` (same staging/launch/reduce helpers)."""
+        if overlap is None:
+            overlap = expert_fn is None
+        R, Tl, D = x.shape
+        self._session_layout("ll", Tl, self.top_k, self.capacity)
+        eps = self.eps
+        sl = self._slots[layer]
+        prep = self._prepare_ll(layer, x, ti, tw, wg, wu, wd,
+                                expert_fn=expert_fn)
+        wp = prep.cs.plan
+        if overlap:
+            self._push_prep(prep)
+            self._pump_sess()
+            assert int(prep.remaining[
+                np.asarray(wp.counts).sum(0) > 0].sum()) == 0
+        else:
+            del self._slot_ready[layer]  # barrier mode: no per-expert launch
+            self._push_prep(prep)
+            self._pump_sess()
+            for r, e in zip(*(a.tolist()
+                              for a in np.nonzero(np.asarray(wp.counts) > 0))):
+                assert self.mems[e // eps].counters[
+                    sl.guard0 + r * eps + e % eps] == 1, (layer, r, e)
+            self._grouped_compute(self.mems, wp, expert_fn, wg, wu, wd,
+                                  sl.recv0, sl.mid0)
+            self._push_grouped(prep.cs.combines, prep.cs.combine_pusher,
+                               prep.cs.combine_channel)
+            self._pump_sess()
+        rd = [self._sret.get((layer, r), {}) for r in range(R)]
+        out, comp = self._ll_reduce(prep.cs, wp, tw, Tl, sl.ret0, rd)
+        tl = self.timeline
+        tl["token_completion_us"] = comp
+        tl["last_delivery_us"] = self.net.clock_us
+        if tl["first_compute_us"] is not None:
+            tl["overlap_us"] = (tl["last_dispatch_write_us"]
+                                - tl["first_compute_us"])
+        return out
+
+    def run_step_serial(self, xs, tis, tws, wg=None, wu=None, wd=None, *,
+                        expert_fn=None, nonmoe_fwd_us: float = 0.0,
+                        nonmoe_bwd_us: float = 0.0) -> list:
+        """One training step, layer-serialized (the no-overlap baseline,
+        same session): each MoE layer's stream is pushed and drained to
+        quiescence, THEN the non-MoE compute segment advances the clock with
+        the network idle; the backward pass quiesces each mirrored
+        combine-grad stream before the next backward segment.  Per-expert
+        (PR 2) overlap stays ON inside each layer — the A/B isolates the
+        *cross-layer* contribution.  L forward (+ L backward) drains."""
+        assert self.session and self._sess_mode in (None, "ll")
+        L = self.n_layers
+        assert len(xs) == L
+        self._session_layout("ll", xs[0].shape[1], self.top_k, self.capacity)
+        net = self.net
+        t0 = net.clock_us
+        outs = []
+        for l in range(L):
+            outs.append(self._run_layer_ll(l, xs[l], tis[l], tws[l],
+                                           wg, wu, wd, expert_fn=expert_fn,
+                                           overlap=True))
+            if l < L - 1:
+                net.advance(nonmoe_fwd_us)
+        if self.mirror:
+            for l in reversed(range(L)):
+                net.advance(nonmoe_bwd_us)   # backward compute of layer l
+                mp = self._prepare_ll(L + l, None, tis[l], None,
+                                      launch_compute=False)
+                self._push_prep(mp)
+                self._pump_sess()            # grad traffic fully drained
+            net.advance(nonmoe_bwd_us)       # trailing segment (optimizer)
+        self.timeline["step_us"] = net.clock_us - t0
+        return outs
+
+    def run_step_pipelined(self, xs, tis, tws, wg=None, wu=None, wd=None, *,
+                           expert_fn=None, nonmoe_fwd_us: float = 0.0,
+                           nonmoe_bwd_us: float = 0.0) -> list:
+        """One training step, fully pipelined on the event clock: all L
+        layers' command streams are prepared onto the shared columnar path
+        up front, rank r enqueues layer l+1's dispatch the moment ITS
+        layer-l combine returns have landed plus its non-MoE segment (a
+        Timer — no global barrier), and the backward pass fires each
+        mirrored combine-grad stream along the per-rank backward compute
+        chain, fire-and-forget: grad traffic drains UNDER the remaining
+        backward segments and must only complete by step end.  ONE pump
+        drains the entire step: ``drains_per_step == 1`` for any L."""
+        assert self.session and self._sess_mode in (None, "ll")
+        L, R = self.n_layers, self.n_ranks
+        assert len(xs) == L
+        self._session_layout("ll", xs[0].shape[1], self.top_k, self.capacity)
+        net = self.net
+        t0 = net.clock_us
+        preps = [self._prepare_ll(l, xs[l], tis[l], tws[l], wg, wu, wd,
+                                  expert_fn=expert_fn) for l in range(L)]
+        mpreps = ([self._prepare_ll(L + l, None, tis[l], None,
+                                    launch_compute=False) for l in range(L)]
+                  if self.mirror else None)
+
+        def fwd_chain(nxt):
+            def cb(rank, now):
+                net.call_at(now + nonmoe_fwd_us,
+                            lambda: self._push_prep(nxt, rank))
+            return cb
+        for l in range(L - 1):
+            self._slot_done_cb[l] = fwd_chain(preps[l + 1])
+
+        if self.mirror:
+            def bwd_cascade(rank, now):
+                # per-rank backward compute chain: the whole Timer cascade
+                # is scheduled at once — mirror slot l's combine-grad
+                # stream launches when the chain REACHES layer l, and its
+                # traffic overlaps every later segment
+                t = now
+                for l in reversed(range(L)):
+                    t += nonmoe_bwd_us
+                    mp = mpreps[l]
+                    net.call_at(t, lambda mp=mp, rank=rank:
+                                self._push_prep(mp, rank))
+                net.call_at(t + nonmoe_bwd_us, lambda: None)  # trailing seg
+            self._slot_done_cb[L - 1] = bwd_cascade
+
+        self._push_prep(preps[0])
+        self._pump_sess()
+        for prep in preps:
+            assert int(prep.remaining[
+                np.asarray(prep.cs.plan.counts).sum(0) > 0].sum()) == 0, \
+                "pipelined step quiesced with unlaunched experts"
+        outs = []
+        for l in range(L):
+            rd = [self._sret.get((l, r), {}) for r in range(R)]
+            out, comp = self._ll_reduce(preps[l].cs, preps[l].cs.plan,
+                                        tws[l], preps[l].Tl,
+                                        self._slots[l].ret0, rd)
+            outs.append(out)
+        tl = self.timeline
+        tl["token_completion_us"] = comp
+        tl["last_delivery_us"] = self.net.clock_us
+        tl["step_us"] = net.clock_us - t0
+        return outs
+
     # ===================================================== LL protocol =====
     def run(self, x: np.ndarray, top_idx: np.ndarray, top_w: np.ndarray,
             wg: Optional[np.ndarray] = None, wu: Optional[np.ndarray] = None,
             wd: Optional[np.ndarray] = None, *,
             expert_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None,
-            overlap: Optional[bool] = None) -> np.ndarray:
+            overlap: Optional[bool] = None, layer: int = 0) -> np.ndarray:
         """x: (R, Tl, D); top_idx/top_w: (R, Tl, K); w*: (E, D, F)/(E, F, D).
 
         Expert compute is either the built-in grouped SwiGLU over
@@ -369,15 +882,22 @@ class EPWorld:
         fences and issues one grouped call.  Default: True when per-expert
         weights are given, False for a generic grouped ``expert_fn`` (whose
         contract prices a full-width call per bucket).
+
+        In session mode (``session=True``) the call routes to the slot of
+        ``layer`` in the persistent world — registration and memory are
+        reused, only per-step state resets (see ``begin_step``).
         """
+        if expert_fn is None:
+            assert wg is not None and wu is not None and wd is not None
+        if self.session:
+            return self._run_layer_ll(layer, x, top_idx, top_w, wg, wu, wd,
+                                      expert_fn=expert_fn, overlap=overlap)
         R, Tl, D = x.shape
         K, C = self.top_k, self.capacity
         E, eps, tb = self.n_experts, self.eps, self.tok_bytes
         nc = self.n_channels
         if overlap is None:
             overlap = expert_fn is None
-        if expert_fn is None:
-            assert wg is not None and wu is not None and wd is not None
         # wire-format regions size by the per-token wire footprint wb
         # (quantized payload + inline scales; == tb for fp32 passthrough);
         # expert outputs and combine returns are always fp32 (tb) and live
@@ -430,40 +950,9 @@ class EPWorld:
         order = np.argsort(cs.entry_expert, kind="stable")
         starts = np.searchsorted(cs.entry_expert[order], np.arange(E + 1))
 
-        def single_expert(e, toks):
-            if expert_fn is None:
-                return np_swiglu(toks, wg[e], wu[e], wd[e])
-            buf = np.zeros((E, len(toks), D), np.float32)
-            buf[e] = toks
-            cnts = np.zeros((E,), np.int32)
-            cnts[e] = len(toks)
-            return np.asarray(_call_expert_fn(expert_fn, buf, cnts))[e]
-
         def launch(e):
-            d, el = divmod(e, eps)
-            cnts = np.asarray(wp.counts)[:, e]
-            srcs = np.flatnonzero(cnts)
-            self._note_compute(("ll", e))
-            bases = [recv0 + (int(r) * eps + el) * C * wb for r in srcs]
-            toks = self.codec.decode(np.concatenate(
-                [mems[d].data[b:b + int(cnts[r]) * wb]
-                 for b, r in zip(bases, srcs)]).reshape(-1, wb), D)
-            out = np.ascontiguousarray(single_expert(e, toks),
-                                       np.float32).view(np.uint8).reshape(-1)
-            # write fp32 outputs into the expert-output region (slot-major
-            # per source, mirroring the bucket), then stream the combine
-            # writes for exactly this bucket
-            off = 0
-            for r in srcs:
-                ob = out0 + (int(r) * eps + el) * C * tb
-                n_b = int(cnts[r]) * tb
-                mems[d].data[ob:ob + n_b] = out[off:off + n_b]
-                off += n_b
-            rows = order[starts[e]:starts[e + 1]]
-            if len(rows):
-                self._push_grouped(cs.combines[rows],
-                                   cs.combine_pusher[rows],
-                                   cs.combine_channel[rows])
+            self._ll_launch_expert(e, cs, wp, recv0, out0, wg, wu, wd,
+                                   expert_fn, order, starts)
 
         self._push_grouped(cs.writes, cs.write_pusher, cs.write_channel)
         self._push_grouped(cs.fences, cs.fence_pusher, cs.fence_channel)
@@ -484,27 +973,11 @@ class EPWorld:
 
         self._finish_timeline()
 
-        # -------------------- weighted reduce at source -------------------
-        # the return region is expert-major (coalescable combine runs);
-        # gather each (token, choice)'s partial back through ret_pos
-        out = np.zeros((R, Tl, D), np.float64)
-        comp = np.zeros((R, Tl))
-        for r in range(R):
-            ret = _from_bytes(mems[r].data[ret0:ret0 + Tl * K * tb],
-                              (Tl * K, D))
-            g = ret[np.asarray(cs.ret_pos[r])]          # (Tl, K, D)
-            out[r] = np.einsum("tkd,tk->td", g.astype(np.float64),
-                               np.where(wp.valid[r], top_w[r], 0.0)
-                               .astype(np.float64))
-            # event-clock completion per token: the last of its choices'
-            # combine-return deliveries, mapped through the same ret_pos
-            # the reduce gathers with (invalid choices contribute nothing)
-            slot_t = self._completion_from_returns(r, Tl * K)
-            per_choice = np.where(np.asarray(wp.valid[r]),
-                                  slot_t[np.asarray(cs.ret_pos[r])], 0.0)
-            comp[r] = per_choice.max(axis=1) if K else 0.0
+        # weighted reduce at source + per-token completion clock
+        out, comp = self._ll_reduce(cs, wp, top_w, Tl, ret0,
+                                    [self._ret_deliver[r] for r in range(R)])
         self.timeline["token_completion_us"] = comp
-        return out.astype(np.float32)
+        return out
 
     def _grouped_compute(self, mems, wp, expert_fn, wg, wu, wd, recv0, out0):
         """Barrier-mode expert compute: one grouped call over every receive
@@ -544,7 +1017,8 @@ class EPWorld:
                wd: Optional[np.ndarray] = None, *,
                expert_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None,
                n_chunks: int = 1,
-               capacity: Optional[int] = None) -> np.ndarray:
+               capacity: Optional[int] = None,
+               layer: int = 0) -> np.ndarray:
         """Chunked + dedup'd + hierarchical dispatch/combine (paper HT mode)
         executed literally on the transport substrate.
 
@@ -579,16 +1053,26 @@ class EPWorld:
         if expert_fn is None:
             assert wg is not None and wu is not None and wd is not None
 
-        send0 = 0
-        recv0 = send0 + R * C * ent_b
-        comb0 = recv0 + R * C * ent_b
-        ret0 = comb0 + R * C * tb
-        total = ret0 + R * C * tb
-        mems, proxies = self._make_world(total, n_counters=R * n_chunks)
-
-        self._reset_timeline()
+        if self.session:
+            # session slot: offsets, channels, counter ids all namespaced
+            # per layer; world + watch + readiness dispatcher are persistent
+            self._session_layout("ht", Tl, K, C, n_chunks)
+            sl = self._slots[layer]
+            send0, recv0, comb0 = sl.send0, sl.recv0, sl.mid0
+            ret0, total = sl.ret0, sl.end
+            ch0, ncl, g0 = sl.ch0, sl.ncl, sl.guard0
+            mems, proxies = self.mems, self.proxies
+        else:
+            send0 = 0
+            recv0 = send0 + R * C * ent_b
+            comb0 = recv0 + R * C * ent_b
+            ret0 = comb0 + R * C * tb
+            total = ret0 + R * C * tb
+            ch0, ncl, g0 = 0, nc, 0
+            mems, proxies = self._make_world(total, n_counters=R * n_chunks)
+            self._reset_timeline()
+            self._watch_dispatch(recv0, comb0, ret_region=(ret0, total, tb))
         self.timeline["n_chunks"] = n_chunks
-        self._watch_dispatch(recv0, comb0, ret_region=(ret0, total, tb))
 
         # ---- per-source dedup plans + payload staging --------------------
         valid = top_idx >= 0
@@ -624,9 +1108,18 @@ class EPWorld:
         def marker_ready(dst, src, counter_idx, chunk):
             assert counter_idx == src * n_chunks + chunk
             ready.append((dst, src, chunk))
-        for g in range(R):
-            proxies[g].on_ready = \
-                lambda src, idx, v, g=g: marker_ready(g, src, idx, v)
+        if self.session:
+            # the session dispatcher strips the slot's counter namespace and
+            # routes here; thunks run off the shared session ready queue
+            def on_marker(dst, src, idx_rel, chunk):
+                assert idx_rel == src * n_chunks + chunk
+                self._ready.append(
+                    lambda d=dst, s=src, c=chunk: launch(d, s, c))
+            self._slot_ready[layer] = on_marker
+        else:
+            for g in range(R):
+                proxies[g].on_ready = \
+                    lambda src, idx, v, g=g: marker_ready(g, src, idx, v)
 
         def launch(g, r, c):
             ts, gs, slots, chunk_of = plans[r]
@@ -647,10 +1140,10 @@ class EPWorld:
             # return writes land in [ret0, total): unregistered memory, so
             # they satisfy no guard (HT needs none — chunk markers are
             # SEQ_ATOMICs ordered behind the chunk's writes per channel)
-            writes = pack_cmds(int(Op.WRITE), r, r % nc,
+            writes = pack_cmds(int(Op.WRITE), r, ch0 + r % ncl,
                                comb0 + (r * C + sl) * tb,
                                ret0 + (g * C + sl) * tb, tb, 0)
-            self._push_words(g, r % nc, writes)
+            self._push_words(g, ch0 + r % ncl, writes)
 
         # ---- chunked dispatch: writes, then the chunk's markers ----------
         for r in range(R):
@@ -659,24 +1152,30 @@ class EPWorld:
                 sel = chunk_of == c
                 if sel.any():
                     writes = pack_cmds(
-                        int(Op.WRITE), gs[sel], gs[sel] % nc,
+                        int(Op.WRITE), gs[sel], ch0 + gs[sel] % ncl,
                         send0 + (gs[sel] * C + slots[sel]) * ent_b,
                         recv0 + (r * C + slots[sel]) * ent_b, ent_b, 0)
                     self._push_grouped(writes, np.full(int(sel.sum()), r),
-                                       gs[sel] % nc)
+                                       ch0 + gs[sel] % ncl)
                 # chunk markers ride the same per-destination channel as the
                 # chunk's writes, so their sequence numbers order after them
                 markers = pack_cmds(int(Op.ATOMIC), np.arange(R),
-                                    np.arange(R) % nc, c,
-                                    r * n_chunks + c, 0, 0)
-                self._push_grouped(markers, np.full(R, r), np.arange(R) % nc)
+                                    ch0 + np.arange(R) % ncl, c,
+                                    g0 + r * n_chunks + c, 0, 0)
+                self._push_grouped(markers, np.full(R, r),
+                                   ch0 + np.arange(R) % ncl)
 
-        self._pump_events(proxies, ready, lambda b: launch(*b))
+        if self.session:
+            self._pump_sess()
+        else:
+            self._pump_events(proxies, ready, lambda b: launch(*b))
         for g in range(R):
             for r in range(R):
                 for c in range(n_chunks):
-                    assert mems[g].counters[r * n_chunks + c] == 1, (g, r, c)
-        self._finish_timeline()
+                    assert mems[g].counters[g0 + r * n_chunks + c] == 1, \
+                        (g, r, c)
+        if not self.session:
+            self._finish_timeline()
 
         # ---- global reduce at the source: sum the per-destination partials
         out = np.zeros((R, Tl, D), np.float64)
@@ -687,7 +1186,9 @@ class EPWorld:
             np.add.at(out[r], ts, ret[gs * C + slots].astype(np.float64))
             # token completion = last return-entry delivery among its
             # (token, destination) entries
-            slot_t = self._completion_from_returns(r, R * C)
+            slot_t = self._completion_from_returns(
+                r, R * C,
+                self._sret.get((layer, r), {}) if self.session else None)
             np.maximum.at(comp[r], ts, slot_t[gs * C + slots])
         self.timeline["token_completion_us"] = comp
         return out.astype(np.float32)
@@ -745,6 +1246,8 @@ class EPWorld:
     def _push_words(self, r: int, ch: int, words: np.ndarray):
         proxies = self.proxies
         self._dirty = True
+        self.timeline["cmds_per_step"] = \
+            self.timeline.get("cmds_per_step", 0) + len(words)
         if self.use_threads:
             # worker threads drain concurrently; pace on ring space (the
             # paper's kMaxInflight sender flow control, §3.1): when the
@@ -787,6 +1290,10 @@ class EPWorld:
         interleaves with in-flight traffic.  Delivery runs through
         ``Network.deliver_ready``: every event sharing the frontier
         timestamp lands in one lock round-trip."""
+        # exact-gated batching counter: one increment per quiesce drain —
+        # the cross-layer step drivers must show exactly 1 per step
+        self.timeline["drains_per_step"] = \
+            self.timeline.get("drains_per_step", 0) + 1
         deliver = self.net.deliver_ready
         if self.use_threads:
             for p in proxies:

@@ -66,6 +66,25 @@ class Message:
         return 1 if self.imm_vec is None else len(self.imm_vec)
 
 
+class Timer:
+    """A scheduled callback on the event clock (no wire footprint).
+
+    Timers share the delivery heap with messages: ``step``/``deliver_ready``
+    pop them in timestamp order, advance ``clock_us``, and invoke ``fn`` —
+    with no receiver dispatch, no byte accounting, and no delivery hook.
+    The EP step pipeline uses them to model serial *compute* segments
+    (non-MoE forward/backward time) between communication events: a timer
+    models "this rank's compute finishes at t", and its callback enqueues
+    the next layer's commands — comm scheduled earlier keeps draining on
+    the same clock underneath (comm/compute overlap, DESIGN.md §16)."""
+
+    __slots__ = ("fn", "deliver_t")
+
+    def __init__(self, fn: Callable[[], None], deliver_t: float = 0.0):
+        self.fn = fn
+        self.deliver_t = deliver_t
+
+
 @dataclass
 class NetConfig:
     mode: str = "srd"            # "rc" | "srd"
@@ -232,6 +251,35 @@ class Network:
             for e in entries:
                 heapq.heappush(heap, e)
 
+    # ------------------------------------------------------------- timers --
+    def call_at(self, t: float, fn: Callable[[], None]) -> None:
+        """Schedule ``fn`` to run when the event clock reaches ``t`` (>= now).
+        Fires in timestamp order interleaved with message deliveries."""
+        tm = Timer(fn, max(float(t), self.clock_us))
+        lock = self._lock
+        if lock is not None:
+            lock.acquire()
+        try:
+            self._order += 1
+            heapq.heappush(self._heap, (tm.deliver_t, self._order, tm))
+        finally:
+            if lock is not None:
+                lock.release()
+
+    def advance(self, dt: float) -> None:
+        """Advance the clock by ``dt`` us of serial host/compute time (the
+        *un*-overlapped baseline: nothing is delivered meanwhile — in-flight
+        messages keep their timestamps and deliver on the next pump)."""
+        assert dt >= 0.0
+        lock = self._lock
+        if lock is not None:
+            lock.acquire()
+        try:
+            self.clock_us += dt
+        finally:
+            if lock is not None:
+                lock.release()
+
     def send_batch(self, msgs: list) -> None:
         """Schedule a whole batch of messages in one lock round-trip (the
         proxy's batched-RDMA issue path)."""
@@ -274,11 +322,15 @@ class Network:
             t, _, m = heapq.heappop(heap)
             if t > self.clock_us:
                 self.clock_us = t
-            self._account(m)
+            if isinstance(m, Message):
+                self._account(m)
         finally:
             if lock is not None:
                 lock.release()
         # deliver OUTSIDE the lock: receivers may trigger further sends
+        if isinstance(m, Timer):
+            m.fn()
+            return True
         self.receivers[m.dst](m)
         if self.on_deliver_hook is not None:
             self.on_deliver_hook(m)
@@ -319,12 +371,16 @@ class Network:
             if t0 > self.clock_us:
                 self.clock_us = t0
             for m in batch:
-                self._account(m)
+                if isinstance(m, Message):
+                    self._account(m)
         finally:
             if lock is not None:
                 lock.release()
         hook = self.on_deliver_hook
         for m in batch:         # deliver OUTSIDE the lock (receivers send)
+            if isinstance(m, Timer):
+                m.fn()
+                continue
             self.receivers[m.dst](m)
             if hook is not None:
                 hook(m)

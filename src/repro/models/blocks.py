@@ -59,12 +59,17 @@ def _attn_params(cfg: ModelConfig, d: dict) -> AttnParams:
 def block_apply(cfg: ModelConfig, dist: Optional[DistCtx], p: dict, x: Array,
                 positions: Array, *, moe_mode: str = "ht",
                 moe_chunks: int = 1, causal_skip: bool = False,
-                sp_islands: bool = False) -> tuple[Array, dict]:
+                sp_islands: bool = False,
+                moe_backend=None) -> tuple[Array, dict]:
     """x: (B, S, D) residual (sharded P(bd, model, None)) -> (x', aux).
 
     ``sp_islands``: route attention/MLP through explicit shard_map islands
     (manual Megatron TP+SP: all-gather(seq) fwd / reduce-scatter bwd) instead
     of GSPMD constraint transitions — see EXPERIMENTS.md §Perf.
+
+    ``moe_backend``: a backend name or :class:`EPBackend` instance handed to
+    :func:`moe_apply` — a model passes one instance to ALL its blocks for
+    the persistent-session path (registration once per step, DESIGN §16).
     """
     aux = {}
     bd = dist.batch_axes if dist else None
@@ -88,7 +93,7 @@ def block_apply(cfg: ModelConfig, dist: Optional[DistCtx], p: dict, x: Array,
     h = rmsnorm(x, p["ln2"], cfg.norm_eps)
     if "moe" in p:
         h, aux = moe_apply(cfg, dist, p["moe"], h, mode=moe_mode,
-                           chunks=moe_chunks)
+                           chunks=moe_chunks, backend=moe_backend)
     elif "mlp" in p:
         if use_islands:
             h = _mlp_island(cfg, dist, p["mlp"], h)

@@ -67,8 +67,13 @@ def forward(cfg: ModelConfig, params: dict, tokens: Array,
             dist: Optional[DistCtx] = None, moe_mode: str = "ht",
             moe_chunks: int = 1, causal_skip: bool = False,
             unroll: bool = False, sp_islands: bool = False,
-            remat_policy: str = "full") -> tuple[Array, dict]:
-    """tokens (B, S_txt) [+ prefix (B, S_pre, D)] -> hidden (B, S, D), aux."""
+            remat_policy: str = "full",
+            moe_backend=None) -> tuple[Array, dict]:
+    """tokens (B, S_txt) [+ prefix (B, S_pre, D)] -> hidden (B, S, D), aux.
+
+    ``moe_backend``: name or EPBackend instance shared by every MoE layer
+    (the persistent-session path registers transport state once per step;
+    host-backend instances require ``unroll=True`` outside jit)."""
     period, n_periods = scan_period(cfg)
     x = B.vocab_embed(dist, params["embed"], tokens)
     if prefix_embeds is not None:
@@ -87,7 +92,8 @@ def forward(cfg: ModelConfig, params: dict, tokens: Array,
                                    positions, moe_mode=moe_mode,
                                    moe_chunks=moe_chunks,
                                    causal_skip=causal_skip,
-                                   sp_islands=sp_islands)
+                                   sp_islands=sp_islands,
+                                   moe_backend=moe_backend)
             aux_loss = aux_loss + aux.get("aux_loss", jnp.float32(0.0))
             dropped = dropped + aux.get("dropped", jnp.float32(0.0))
             if "load" in aux:
@@ -131,13 +137,15 @@ def loss_fn(cfg: ModelConfig, params: dict, tokens: Array, labels: Array,
             moe_chunks: int = 1, causal_skip: bool = False,
             loss_chunk: int = 2048, unroll: bool = False,
             sp_islands: bool = False,
-            remat_policy: str = "full") -> tuple[Array, dict]:
+            remat_policy: str = "full",
+            moe_backend=None) -> tuple[Array, dict]:
     """Next-token cross entropy with a vocab-parallel, seq-chunked head."""
     dtype = jnp.dtype(cfg.dtype)
     x, aux = forward(cfg, cast_params(params, dtype), tokens, prefix_embeds,
                      dist=dist, moe_mode=moe_mode, moe_chunks=moe_chunks,
                      causal_skip=causal_skip, unroll=unroll,
-                     sp_islands=sp_islands, remat_policy=remat_policy)
+                     sp_islands=sp_islands, remat_policy=remat_policy,
+                     moe_backend=moe_backend)
     head = lm_head_weight(cfg, params).astype(dtype)
     if prefix_embeds is not None:  # prefix positions carry no label
         x = x[:, prefix_embeds.shape[1]:]

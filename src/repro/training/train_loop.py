@@ -4,6 +4,7 @@ straggler/failure handling, checkpoint/restart.
 """
 from __future__ import annotations
 
+import bisect
 import time
 from dataclasses import dataclass, field
 from functools import partial
@@ -50,8 +51,6 @@ class HParams:
 def init_state(cfg: ModelConfig, key: Array, *,
                dist: Optional[DistCtx] = None) -> TrainState:
     if dist is not None:
-        shardings = None  # params created then resharded below
-
         def initer(k):
             return Z.init_params(cfg, k)
 
@@ -152,20 +151,27 @@ class Watchdog:
     def __init__(self, deadline_s: float = 600.0, straggler_factor: float = 2.0):
         self.deadline = deadline_s
         self.factor = straggler_factor
-        self.history: list[float] = []
+        self.history: list[float] = []   # arrival-order window (<= 100)
+        self._sorted: list[float] = []   # same window, kept sorted
         self.events: list[WatchdogEvent] = []
 
     def observe(self, step: int, elapsed: float) -> Optional[WatchdogEvent]:
+        # the sorted window is maintained incrementally (one bisect insert
+        # and at most one removal per step) instead of re-sorting the whole
+        # history every observation; the upper-median index matches the old
+        # sorted(history)[len // 2] exactly
         ev = None
         if elapsed > self.deadline:
             ev = WatchdogEvent(step, elapsed, "failure")
         elif self.history:
-            med = sorted(self.history)[len(self.history) // 2]
+            med = self._sorted[len(self._sorted) // 2]
             if elapsed > self.factor * med and len(self.history) >= 5:
                 ev = WatchdogEvent(step, elapsed, "straggler")
         self.history.append(elapsed)
+        bisect.insort(self._sorted, elapsed)
         if len(self.history) > 100:
-            self.history.pop(0)
+            oldest = self.history.pop(0)
+            del self._sorted[bisect.bisect_left(self._sorted, oldest)]
         if ev:
             self.events.append(ev)
         return ev
