@@ -11,6 +11,12 @@ cd "$(dirname "$0")/.."
 python -m pip install -e '.[dev]' 2>/dev/null \
     || echo "ci.sh: pip install skipped (offline env); running with baked-in deps"
 
+# Repo lint (repro.analysis.lint, DESIGN.md §17): no magic bit masks
+# outside wire_format.py, no constant division in quantization-scale math,
+# no bare protocol asserts in the transport, occupancy kernels gated with
+# pl.when.  Fails fast before the test suite.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis.lint src/repro
+
 # Tier-1 suite (includes the transport-semantics conformance fuzz harness,
 # tests/test_transport_fuzz.py).  The default run is bounded: the slowest
 # arch/kernel sweeps sit behind `-m slow` (pyproject addopts deselects
@@ -25,6 +31,99 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
 # the jnp refs) through the ops-level mode dispatch on every run.
 REPRO_KERNEL_MODE=interpret PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -x -q tests/test_kernel_modes.py
+
+# Static-analysis gate (DESIGN.md §17): the protocol verifier over
+# fig08-shaped one-shot plans and the fig14-shaped persistent-session slot
+# layout (zero findings on everything the generators emit), plus the
+# Eraser-style race detector — zero findings on the shipped threaded path,
+# while a seeded lock-removal mutant IS flagged (detector liveness).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+import numpy as np
+import threading
+
+from repro.analysis import verify
+from repro.analysis.racecheck import RaceChecker
+from repro.analysis.verify import verify_session_slots
+from repro.core.plan import wire_layout
+from repro.core.transport import EPWorld, NetConfig
+from repro.core.transport.ep_executor import build_command_streams
+from repro.core.transport.fifo import FifoChannel, pack_cmds
+
+# fig08-shaped one-shot LL plans (EP degree 4, 64 experts, dispatch +
+# combine) across {fp32, fp8} x {rc, srd}: zero findings
+rng = np.random.default_rng(0)
+R, eps, Tl, K, D = 4, 16, 32, 4, 32
+E = R * eps
+cap = Tl * K
+ti = rng.integers(0, E, size=(R, Tl, K)).astype(np.int32)
+for wdt in ("fp32", "fp8"):
+    wb = wire_layout(D, wdt).token_bytes
+    recv0 = Tl * wb
+    cs = build_command_streams(ti, E, eps, cap, 4 * D, 8, 0, recv0,
+                               recv0 + R * eps * cap * wb, wire_bytes=wb)
+    for mode in ("rc", "srd"):
+        fs = verify(cs, net_cfg=NetConfig(mode=mode, seed=0), n_channels=8)
+        assert fs == [], [str(f) for f in fs]
+
+# fig14-shaped persistent session (mirrored, L=2): the slot layout passes
+# the namespace-disjointness rules (EPV-009); verify_or_raise is also live
+# inside _session_layout and on every per-layer stream build
+from benchmarks.fig14_training import _make_session, _step_problem
+xs, tis, tws, wg, wu, wd, occ = _step_problem(4, 2)
+ws = _make_session(4, 2)
+ws.run_step_serial(xs, tis, tws, wg, wu, wd)
+fs = verify_session_slots(ws._slots, n_channels=ws.n_channels,
+                          counter_stride=ws._counter_stride)
+assert fs == [], [str(f) for f in fs]
+
+# race gate 1: the shipped threaded path runs with ZERO candidate races
+rng = np.random.default_rng(1)
+R2, eps2, K2, D2, Tl2 = 2, 2, 2, 8, 4
+E2 = R2 * eps2
+x = rng.standard_normal((R2, Tl2, D2)).astype(np.float32)
+ti2 = rng.integers(0, E2, size=(R2, Tl2, K2)).astype(np.int32)
+tw2 = np.full((R2, Tl2, K2), 1.0 / K2, np.float32)
+wgs = (rng.standard_normal((E2, D2, 8)) * 0.2).astype(np.float32)
+wus = (rng.standard_normal((E2, D2, 8)) * 0.2).astype(np.float32)
+wds = (rng.standard_normal((E2, 8, D2)) * 0.2).astype(np.float32)
+with RaceChecker() as rc:
+    w = EPWorld(n_ranks=R2, n_experts=E2, top_k=K2, d=D2, f=8,
+                capacity=Tl2 * K2, net_cfg=NetConfig(mode="srd", seed=0),
+                use_threads=True, n_threads=2)
+    try:
+        w.run(x, ti2, tw2, wgs, wus, wds)
+    finally:
+        for p in w.proxies:
+            p.stop()
+assert rc.findings() == [], [str(f) for f in rc.findings()]
+
+# race gate 2: a lock-removal mutant on the SPSC ring IS flagged
+with RaceChecker() as rc:
+    ch = FifoChannel(16)
+    rc.instrument(ch, strip_locks=True)
+    words = pack_cmds(1, np.zeros(100, np.int64), 0, np.arange(100),
+                      np.arange(100), 8, 0)
+    got = []
+
+    def consumer():
+        while len(got) < 100:
+            out = ch.pop_all()
+            if out is None:
+                ch.wait_nonempty(0.01)
+            else:
+                got.extend(out.tolist())
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    done = 0
+    while done < 100:
+        done += ch.try_push_batch(words[done:done + 7])
+    t.join(timeout=10)
+assert any(f.rule == "RACE-LOCKSET" for f in rc.findings()), \
+    "race detector failed to flag the seeded lock-removal mutant"
+print("ci.sh: static-analysis gate OK (verifier clean on fig08/fig14 "
+      "plans, race detector clean on shipped path, mutant flagged)")
+EOF
 
 # Compressed-dispatch smoke: the quantize-pack kernel body (interpret mode)
 # stays bit-identical to the numpy codec, and an fp8 LL run on the

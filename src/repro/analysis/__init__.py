@@ -1,0 +1,20 @@
+"""Static analysis for the EP transport (ISSUE 9, DESIGN.md §17).
+
+Three tools, none of which execute transport code:
+
+- :mod:`repro.analysis.verify` — the protocol verifier: proves the wire
+  contract's invariant catalog (:mod:`repro.analysis.invariants`) over
+  command streams / guard tables / net configs before any traffic moves.
+- :mod:`repro.analysis.racecheck` — an Eraser-style lockset race detector
+  that instruments ``FifoChannel``/``Network``/``Proxy`` in threaded runs.
+- :mod:`repro.analysis.lint` — repo-specific AST/token lint rules
+  (``python -m repro.analysis.lint src/repro``).
+
+This package may import ``core.transport`` leaf modules (wire_format,
+fifo, simulator, proxy) but never ``ep_executor`` — the executor imports
+the verifier, and the verifier duck-types its ``CommandStreams``.
+"""
+from repro.analysis.invariants import CATALOG, Finding, Rule
+from repro.analysis.verify import verify, verify_or_raise
+
+__all__ = ["CATALOG", "Finding", "Rule", "verify", "verify_or_raise"]

@@ -1,0 +1,250 @@
+"""Repo-specific lint rules over ``src/repro`` (ISSUE 9, DESIGN.md §17).
+
+Run as ``python -m repro.analysis.lint [paths...]`` (default ``src/repro``
+relative to the current directory); exits 1 if any finding.  Rules:
+
+- **LNT-BITMASK** — no magic all-ones bit-mask literals (``0xF``,
+  ``0x7FF``, ...) in ``core/transport`` outside ``wire_format.py``: every
+  field width/mask/shift has exactly one home, so a field resize can't
+  leave a stale literal behind.
+- **LNT-SCALE-DIV** — no float division by a constant-like divisor inside
+  quantization-scale code (codec / quantize_pack / compression): PR 6
+  showed XLA constant-folds ``x / QMAX`` differently from the runtime
+  (1-ULP drift between traced and eager paths); scale math must multiply
+  by a precomputed reciprocal.  Module-level constants (the reciprocal
+  itself) are exempt.
+- **LNT-ASSERT-PROTO** — no bare ``assert`` referencing protocol-width
+  constants (SEQ_MOD, IMM_VAL_MAX, FENCE_COUNT_MAX, N_CHANNELS_MAX, ...)
+  in ``core/transport``: those checks vanish under ``python -O`` and must
+  be explicit :class:`ProtocolError` raises (or verifier rules).
+- **LNT-PL-WHEN** — Pallas kernels (``*_kernel`` functions in
+  ``kernels/``) taking an occupancy/count ref must gate their work with
+  ``pl.when``: unconditionally touching rows past occupancy is exactly
+  the padding-garbage class PR 3's occupancy-aware kernels exist to avoid.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import os
+import sys
+import tokenize
+from dataclasses import dataclass
+
+PROTOCOL_NAMES = frozenset({
+    "SEQ_MOD", "IMM_VAL_MAX", "FENCE_COUNT_MAX", "N_CHANNELS_MAX",
+    "SRD_DISPLACEMENT_BOUND", "IMM_KIND_BITS", "IMM_CH_BITS",
+    "IMM_SEQ_BITS", "IMM_VALUE_BITS", "IMM_COUNT_BITS",
+})
+
+# modules holding quantization-scale math (matched on basename)
+_QUANT_BASENAMES = frozenset({"codec.py", "quantize_pack.py",
+                              "compression.py"})
+
+# smallest all-ones literal worth flagging (0x1/0x3/0x7 are ubiquitous
+# small-flag idioms; field masks start at 4 bits)
+_MIN_MASK = 0xF
+
+
+@dataclass(frozen=True)
+class LintFinding:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+def _posix(path: str) -> str:
+    return path.replace(os.sep, "/")
+
+
+def _in_transport(path: str) -> bool:
+    p = _posix(path)
+    return "core/transport" in p and os.path.basename(p) != "wire_format.py"
+
+
+def _in_kernels(path: str) -> bool:
+    return "kernels" in _posix(path).split("/")
+
+
+def _is_quant_module(path: str) -> bool:
+    return os.path.basename(path) in _QUANT_BASENAMES
+
+
+# ------------------------------------------------------------------------
+# LNT-BITMASK (token level: the AST constant-folds literal forms away)
+# ------------------------------------------------------------------------
+def _check_bitmask(src: str, path: str) -> list[LintFinding]:
+    if not _in_transport(path):
+        return []
+    out = []
+    for tok in tokenize.generate_tokens(io.StringIO(src).readline):
+        if tok.type != tokenize.NUMBER:
+            continue
+        s = tok.string.lower().replace("_", "")
+        if not (s.startswith("0x") or s.startswith("0b")):
+            continue
+        try:
+            v = int(s, 0)
+        except ValueError:
+            continue
+        if v >= _MIN_MASK and (v & (v + 1)) == 0:
+            out.append(LintFinding(
+                path, tok.start[0], "LNT-BITMASK",
+                f"magic bit-mask literal {tok.string}: import the named "
+                "mask from core/transport/wire_format.py"))
+    return out
+
+
+# ------------------------------------------------------------------------
+# LNT-SCALE-DIV
+# ------------------------------------------------------------------------
+def _constant_like(node: ast.expr) -> bool:
+    """Divisors that XLA can constant-fold differently from eager numpy:
+    numeric literals, ALL_CAPS module constants, and casts/calls wrapping
+    those (``np.float32(FP8_MAX)``)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, (int, float)):
+        return True
+    if isinstance(node, ast.Name) and node.id.isupper():
+        return True
+    if isinstance(node, ast.Attribute) and node.attr.isupper():
+        return True
+    if isinstance(node, ast.Call):
+        return any(_constant_like(a) for a in node.args)
+    return False
+
+
+def _check_scale_div(tree: ast.AST, path: str) -> list[LintFinding]:
+    if not _is_quant_module(path):
+        return []
+    out = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue        # module-level reciprocals (_QINV) are the fix
+        for node in ast.walk(fn):
+            if isinstance(node, ast.BinOp) \
+                    and isinstance(node.op, ast.Div) \
+                    and _constant_like(node.right):
+                out.append(LintFinding(
+                    path, node.lineno, "LNT-SCALE-DIV",
+                    "float division by a constant in quantization-scale "
+                    "math: precompute the reciprocal at module level and "
+                    "multiply (XLA constant-folds x / C with different "
+                    "rounding than eager numpy — the PR 6 1-ULP drift "
+                    "class)"))
+    return out
+
+
+# ------------------------------------------------------------------------
+# LNT-ASSERT-PROTO
+# ------------------------------------------------------------------------
+def _check_assert_proto(tree: ast.AST, path: str) -> list[LintFinding]:
+    if not _in_transport(path):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assert):
+            continue
+        names = {n.id for n in ast.walk(node.test)
+                 if isinstance(n, ast.Name)}
+        hit = names & PROTOCOL_NAMES
+        if hit:
+            out.append(LintFinding(
+                path, node.lineno, "LNT-ASSERT-PROTO",
+                f"bare assert references protocol constant(s) "
+                f"{sorted(hit)}: asserts vanish under python -O — raise "
+                "ProtocolError (wire_format) or verify via "
+                "repro.analysis.verify"))
+    return out
+
+
+# ------------------------------------------------------------------------
+# LNT-PL-WHEN
+# ------------------------------------------------------------------------
+def _takes_occupancy(fn: ast.FunctionDef) -> bool:
+    args = [a.arg for a in
+            fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs]
+    return any(a.split("_")[0] in ("cnt", "counts", "occ", "occupancy")
+               for a in args)
+
+
+def _uses_pl_when(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and node.attr == "when" \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id == "pl":
+            return True
+    return False
+
+
+def _check_pl_when(tree: ast.AST, path: str) -> list[LintFinding]:
+    if not _in_kernels(path):
+        return []
+    out = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, ast.FunctionDef) \
+                or not fn.name.endswith("_kernel"):
+            continue
+        if _takes_occupancy(fn) and not _uses_pl_when(fn):
+            out.append(LintFinding(
+                path, fn.lineno, "LNT-PL-WHEN",
+                f"Pallas kernel {fn.name} takes an occupancy/count ref but "
+                "never guards with pl.when: rows past occupancy hold "
+                "padding garbage"))
+    return out
+
+
+# ------------------------------------------------------------------------
+# driver
+# ------------------------------------------------------------------------
+def lint_source(src: str, path: str) -> list[LintFinding]:
+    """Lint one file's source under its (relative) ``path`` — the path
+    decides which rules apply.  Unparseable files produce a single
+    finding rather than a crash."""
+    findings = list(_check_bitmask(src, path))
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return findings + [LintFinding(path, e.lineno or 0, "LNT-PARSE",
+                                       f"syntax error: {e.msg}")]
+    findings += _check_scale_div(tree, path)
+    findings += _check_assert_proto(tree, path)
+    findings += _check_pl_when(tree, path)
+    return findings
+
+
+def lint_paths(paths: list[str]) -> list[LintFinding]:
+    findings: list[LintFinding] = []
+    for root in paths:
+        if os.path.isfile(root):
+            files = [root]
+        else:
+            files = sorted(
+                os.path.join(dp, f)
+                for dp, _, fs in os.walk(root) for f in fs
+                if f.endswith(".py"))
+        for fp in files:
+            with open(fp, encoding="utf-8") as fh:
+                findings += lint_source(fh.read(), fp)
+    findings.sort(key=lambda f: (f.path, f.line))
+    return findings
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or ["src/repro"]
+    findings = lint_paths(paths)
+    for f in findings:
+        print(f)
+    n_files = sum(1 for _ in {f.path for f in findings})
+    if findings:
+        print(f"lint: {len(findings)} finding(s) in {n_files} file(s)")
+        return 1
+    print(f"lint: clean ({', '.join(paths)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -10,10 +10,16 @@ from repro.core.transport.proxy import Proxy, SymmetricMemory
 from repro.core.transport.semantics import (ControlBuffer, GuardTable,
                                             ImmKind, pack_imm, unpack_imm)
 from repro.core.transport.simulator import Message, NetConfig, Network
+from repro.core.transport.wire_format import (FENCE_COUNT_MAX, IMM_VAL_MAX,
+                                              N_CHANNELS_MAX, SEQ_MOD,
+                                              SRD_DISPLACEMENT_BOUND,
+                                              ProtocolError)
 
 __all__ = ["EPWorld", "np_grouped_swiglu", "np_swiglu", "FLAG_FENCE",
            "CmdColumns", "FifoChannel", "Op", "TransferCmd", "pack_cmds",
            "unpack_cmds", "Proxy", "SymmetricMemory", "ControlBuffer",
            "GuardTable", "ImmKind", "pack_imm", "unpack_imm", "Message",
            "NetConfig", "Network", "WIRE_DTYPES", "WireCodec", "get_codec",
-           "quantize_blocked", "dequantize_blocked"]
+           "quantize_blocked", "dequantize_blocked", "ProtocolError",
+           "N_CHANNELS_MAX", "SEQ_MOD", "IMM_VAL_MAX", "FENCE_COUNT_MAX",
+           "SRD_DISPLACEMENT_BOUND"]

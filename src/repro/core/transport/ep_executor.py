@@ -45,6 +45,15 @@ from repro.core.transport.fifo import FLAG_FENCE, Op, pack_cmds
 from repro.core.transport.proxy import Proxy, SymmetricMemory
 from repro.core.transport.semantics import IMM_VAL_MAX
 from repro.core.transport.simulator import Network, NetConfig
+from repro.core.transport.wire_format import ProtocolError
+
+
+def verify_or_raise(*args, **kwargs):
+    # Lazy: repro.analysis.verify imports transport leaf modules, which pull
+    # in this package's __init__ — a top-level import here would make the
+    # cycle analysis → verify → transport → ep_executor → analysis.
+    from repro.analysis.verify import verify_or_raise as _vor
+    return _vor(*args, **kwargs)
 
 F32 = np.dtype(np.float32)
 
@@ -471,6 +480,9 @@ class EPWorld:
                                   end=base + slot_bytes,
                                   guard0=s * stride,
                                   ch0=(s % n_groups) * cpl, ncl=cpl))
+        # static namespace-disjointness check before registration (§17)
+        verify_or_raise(slots=slots, n_channels=self.n_channels,
+                        counter_stride=stride)
         self._slots = slots
         self._sess_mode = mode
         self._sess_geom = (Tl, K, C, n_chunks)
@@ -663,6 +675,9 @@ class EPWorld:
                                    wire_bytes=wb, out0=sl.mid0,
                                    ch_base=sl.ch0, n_ch_eff=sl.ncl,
                                    guard_base=sl.guard0)
+        # static protocol verification in the slot's namespace (DESIGN §17)
+        verify_or_raise(cs, net_cfg=self.net.cfg,
+                        n_channels=self.n_channels)
         wp = cs.plan
         assert int(wp.counts.max()) <= C, "capacity overflow in setup"
         order = np.argsort(cs.entry_expert, kind="stable")
@@ -928,6 +943,8 @@ class EPWorld:
         # unregistered, so combine writes can never satisfy a dispatch fence
         for p in proxies:
             p.register_table(*cs.guard_table)
+        # static protocol verification before any traffic moves (DESIGN §17)
+        verify_or_raise(cs, net_cfg=self.net_cfg, n_channels=nc)
 
         self._reset_timeline()
         self._watch_dispatch(recv0, out0, ret_region=(ret0, total, tb))
@@ -1041,10 +1058,12 @@ class EPWorld:
         # the largest divisor of Tl (recorded in the timeline) instead of
         # silently dropping the pipeline to one chunk
         n_chunks = planlib.effective_chunks(Tl, n_chunks)
-        # chunk ids ride the 16-bit SEQ_ATOMIC operand field
-        assert n_chunks <= IMM_VAL_MAX + 1, \
-            f"n_chunks {n_chunks} exceeds the {IMM_VAL_MAX + 1} chunk ids " \
-            "the immediate codec can carry"
+        # chunk ids ride the 16-bit SEQ_ATOMIC operand field; raised (not
+        # assert-ed) so the contract holds under ``python -O`` [EPV-003]
+        if n_chunks > IMM_VAL_MAX + 1:
+            raise ProtocolError(
+                f"n_chunks {n_chunks} exceeds the {IMM_VAL_MAX + 1} chunk "
+                "ids the immediate codec can carry")
         chunk_len = Tl // n_chunks
         # dedup-entry payload: wire-format token (quantized + inline scales
         # for fp8/int8; == tb for fp32) + K expert ids + K combine weights
@@ -1306,9 +1325,10 @@ class EPWorld:
                 while ready:
                     launch(ready.pop())
                 for p in proxies:  # surface worker failures immediately
-                    if p.error is not None:
+                    err = p.poll_error()
+                    if err is not None:
                         raise RuntimeError(
-                            f"proxy {p.rank} worker failed") from p.error
+                            f"proxy {p.rank} worker failed") from err
                 if delivered:
                     calm = 0
                     continue

@@ -21,6 +21,15 @@ from typing import NamedTuple, Optional
 
 import numpy as np
 
+from repro.core.transport.wire_format import (CH_MASK, CH_SHIFT, FLAG_FENCE,
+                                              FLAGS_MASK, FLAGS_SHIFT,
+                                              LEN_MASK, MASK32, OP_BITS,
+                                              OP_MASK, RANK_MASK, RANK_SHIFT,
+                                              VALUE_MASK, VALUE_SHIFT)
+
+__all__ = ["Op", "FLAG_FENCE", "TransferCmd", "pack_cmds", "CmdColumns",
+           "unpack_cmds", "FifoChannel"]
+
 
 class Op(IntEnum):
     WRITE = 1          # one-sided RDMA write
@@ -31,9 +40,6 @@ class Op(IntEnum):
     BARRIER = 4        # reserved opcode (no receiver-side state; the event
     #                    clock quiesce replaced the barrier round-trip)
     WRITE_ATOMIC = 5   # write with piggybacked atomic (completion counter)
-
-
-FLAG_FENCE = 0x1   # atomic uses LL completion-fence semantics (else HT seq)
 
 
 @dataclass(frozen=True)
@@ -51,24 +57,30 @@ class TransferCmd:
     flags: int = 0      # 8 bits (FLAG_FENCE, ...)
 
     def pack(self) -> np.ndarray:
-        w0 = (int(self.op) & 0xF) | ((self.dst_rank & 0xFFF) << 4) | \
-             ((self.channel & 0xFF) << 16) | ((self.flags & 0xFF) << 24)
-        w3 = (self.length & 0xFFFFF) | ((self.value & 0xFFF) << 20)
-        return np.array([w0, self.src_off & 0xFFFFFFFF,
-                         self.dst_off & 0xFFFFFFFF, w3], dtype=np.uint32)
+        w0 = (int(self.op) & OP_MASK) \
+            | ((self.dst_rank & RANK_MASK) << RANK_SHIFT) \
+            | ((self.channel & CH_MASK) << CH_SHIFT) \
+            | ((self.flags & FLAGS_MASK) << FLAGS_SHIFT)
+        w3 = (self.length & LEN_MASK) | ((self.value & VALUE_MASK)
+                                         << VALUE_SHIFT)
+        return np.array([w0, self.src_off & MASK32,
+                         self.dst_off & MASK32, w3], dtype=np.uint32)
 
     @staticmethod
     def unpack(words: np.ndarray) -> "TransferCmd":
         w0, w1, w2, w3 = words.tolist()
-        return TransferCmd(op=_OP_TABLE[w0 & 0xF], dst_rank=(w0 >> 4) & 0xFFF,
-                           channel=(w0 >> 16) & 0xFF, src_off=w1, dst_off=w2,
-                           length=w3 & 0xFFFFF, value=(w3 >> 20) & 0xFFF,
-                           flags=(w0 >> 24) & 0xFF)
+        return TransferCmd(op=_OP_TABLE[w0 & OP_MASK],
+                           dst_rank=(w0 >> RANK_SHIFT) & RANK_MASK,
+                           channel=(w0 >> CH_SHIFT) & CH_MASK,
+                           src_off=w1, dst_off=w2,
+                           length=w3 & LEN_MASK,
+                           value=(w3 >> VALUE_SHIFT) & VALUE_MASK,
+                           flags=(w0 >> FLAGS_SHIFT) & FLAGS_MASK)
 
 
 # tuple dispatch: Op.__call__ through EnumMeta is hot in the consumer loop
-_OP_TABLE = (None, Op.WRITE, Op.ATOMIC, Op.DRAIN, Op.BARRIER, Op.WRITE_ATOMIC,
-             None, None, None, None, None, None, None, None, None, None)
+_OP_TABLE = tuple(Op(v) if v in Op._value2member_map_ else None
+                  for v in range(1 << OP_BITS))
 
 
 def pack_cmds(op, dst_rank, channel, src_off, dst_off, length, value,
@@ -85,14 +97,16 @@ def pack_cmds(op, dst_rank, channel, src_off, dst_off, length, value,
                                length, value, flags)]))
     n = op.size
     out = np.empty((n, 4), np.uint32)
-    out[:, 0] = ((op.reshape(-1) & 0xF)
-                 | ((dst_rank.reshape(-1) & 0xFFF) << 4)
-                 | ((channel.reshape(-1) & 0xFF) << 16)
-                 | ((flags.reshape(-1) & 0xFF) << 24)).astype(np.uint32)
-    out[:, 1] = (src_off.reshape(-1) & 0xFFFFFFFF).astype(np.uint32)
-    out[:, 2] = (dst_off.reshape(-1) & 0xFFFFFFFF).astype(np.uint32)
-    out[:, 3] = ((length.reshape(-1) & 0xFFFFF)
-                 | ((value.reshape(-1) & 0xFFF) << 20)).astype(np.uint32)
+    out[:, 0] = ((op.reshape(-1) & OP_MASK)
+                 | ((dst_rank.reshape(-1) & RANK_MASK) << RANK_SHIFT)
+                 | ((channel.reshape(-1) & CH_MASK) << CH_SHIFT)
+                 | ((flags.reshape(-1) & FLAGS_MASK) << FLAGS_SHIFT)
+                 ).astype(np.uint32)
+    out[:, 1] = (src_off.reshape(-1) & MASK32).astype(np.uint32)
+    out[:, 2] = (dst_off.reshape(-1) & MASK32).astype(np.uint32)
+    out[:, 3] = ((length.reshape(-1) & LEN_MASK)
+                 | ((value.reshape(-1) & VALUE_MASK) << VALUE_SHIFT)
+                 ).astype(np.uint32)
     return out
 
 
@@ -118,10 +132,12 @@ def unpack_cmds(words: np.ndarray) -> CmdColumns:
     the fields ``TransferCmd.unpack(words[i])`` would produce."""
     w = words.astype(np.int64)
     w0, w3 = w[:, 0], w[:, 3]
-    return CmdColumns(op=w0 & 0xF, dst_rank=(w0 >> 4) & 0xFFF,
-                      channel=(w0 >> 16) & 0xFF, src_off=w[:, 1],
-                      dst_off=w[:, 2], length=w3 & 0xFFFFF,
-                      value=(w3 >> 20) & 0xFFF, flags=(w0 >> 24) & 0xFF)
+    return CmdColumns(op=w0 & OP_MASK,
+                      dst_rank=(w0 >> RANK_SHIFT) & RANK_MASK,
+                      channel=(w0 >> CH_SHIFT) & CH_MASK, src_off=w[:, 1],
+                      dst_off=w[:, 2], length=w3 & LEN_MASK,
+                      value=(w3 >> VALUE_SHIFT) & VALUE_MASK,
+                      flags=(w0 >> FLAGS_SHIFT) & FLAGS_MASK)
 
 
 class FifoChannel:

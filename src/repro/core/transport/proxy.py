@@ -47,15 +47,34 @@ import numpy as np
 
 from repro.core.transport.fifo import (FLAG_FENCE, FifoChannel, Op,
                                        TransferCmd, unpack_cmds)
-from repro.core.transport.semantics import (FENCE_COUNT_MAX, IMM_VAL_MAX,
-                                            N_CHANNELS_MAX, SEQ_MOD,
-                                            ControlBuffer, GuardTable,
+from repro.core.transport.semantics import (ControlBuffer, GuardTable,
                                             ImmKind, pack_imm, unpack_imm)
-from repro.core.transport.simulator import Message, Network
+from repro.core.transport.simulator import Message, NetConfig, Network
+from repro.core.transport.wire_format import (CH_BITS, CH_MASK, IMM_CH_SHIFT,
+                                              IMM_COUNT_SHIFT, IMM_SEQ_SHIFT,
+                                              IMM_VALUE_SHIFT, FENCE_COUNT_MAX,
+                                              IMM_VAL_MAX, N_CHANNELS_MAX,
+                                              SEQ_MOD,
+                                              SRD_DISPLACEMENT_BOUND,
+                                              ProtocolError)
 
 
 # enum lookup for batch error reporting (matches the scalar path's message)
 _OP_OF = {int(o): o for o in Op}
+
+
+def coalesce_cap(cfg: NetConfig) -> int:
+    """Longest write run one wire message may carry under ``cfg``.  Each
+    sub-write keeps its own sequence number, so under srd a delayed message
+    can be displaced by up to ``(reorder_window + 1) * cap`` *sequences*,
+    not arrivals; the cap keeps that product inside the receiver's
+    documented ``SEQ_MOD // 4`` displacement bound (semantics.py).  rc
+    delivers per-link in order (no displacement) — the cap there is
+    payload-assembly sanity.  Module-level (pure in ``cfg``) so the static
+    verifier checks the exact cap the proxy will use."""
+    if cfg.mode == "srd":
+        return max(1, SRD_DISPLACEMENT_BOUND // (cfg.reorder_window + 1))
+    return 256
 
 
 @dataclass
@@ -77,8 +96,9 @@ class Proxy:
                  n_threads: int = 4, n_channels: int = 8,
                  k_max_inflight: int = 64, columnar: bool = True,
                  coalesce: bool = True):
-        assert n_channels <= N_CHANNELS_MAX, \
-            f"imm codec carries {N_CHANNELS_MAX} channels max"
+        if n_channels > N_CHANNELS_MAX:
+            raise ProtocolError(f"n_channels {n_channels} > imm codec max "
+                                f"{N_CHANNELS_MAX}")
         self.rank = rank
         self.net = net
         self.mem = mem
@@ -152,8 +172,18 @@ class Proxy:
     @property
     def busy(self) -> bool:
         """True while any command is queued or mid-execution (used by the
-        event-clock quiesce condition in threaded mode)."""
-        return self._executing > 0 or any(c.inflight for c in self.channels)
+        event-clock quiesce condition in threaded mode).  ``_executing`` is
+        read under the proxy lock — worker threads write it there — so the
+        quiesce loop never reads a torn/stale snapshot."""
+        with self._lock:
+            executing = self._executing
+        return executing > 0 or any(c.inflight for c in self.channels)
+
+    def poll_error(self) -> Optional[BaseException]:
+        """First worker failure, read under the proxy lock (workers publish
+        it there); the event-clock pump re-raises it on the main thread."""
+        with self._lock:
+            return self.error
 
     def _worker(self, tid: int):
         my = self.channels[tid::self.n_threads]
@@ -173,8 +203,9 @@ class Proxy:
                 try:
                     self._execute_words(words)
                 except BaseException as e:     # surface instead of hanging:
-                    if self.error is None:     # the quiesce loop re-raises
-                        self.error = e
+                    with self._lock:           # the quiesce loop re-raises
+                        if self.error is None:
+                            self.error = e
                 finally:
                     with self._lock:
                         self._executing -= 1
@@ -246,10 +277,14 @@ class Proxy:
         self.stats["atomics"] += 1
         operand = cmd.src_off               # 32-bit atomic operand field
         if fence:
-            assert operand <= FENCE_COUNT_MAX, operand
+            if operand > FENCE_COUNT_MAX:
+                raise ProtocolError(f"fence count {operand} > "
+                                    f"{FENCE_COUNT_MAX} (21-bit imm field)")
             imm = pack_imm(ImmKind.FENCE_ATOMIC, cmd.channel, 0, operand)
         else:
-            assert operand <= IMM_VAL_MAX, operand
+            if operand > IMM_VAL_MAX:
+                raise ProtocolError(f"atomic operand {operand} > "
+                                    f"{IMM_VAL_MAX} (16-bit imm field)")
             seq = self._next_seq(cmd.dst_rank, cmd.channel)
             imm = pack_imm(ImmKind.SEQ_ATOMIC, cmd.channel, seq, operand)
         # dst_off addresses the guard/counter by wide id (zero-byte
@@ -260,20 +295,11 @@ class Proxy:
 
     # ----------------------------------------------- batched cmd execution --
     def _coalesce_cap(self) -> int:
-        """Longest write run one wire message may carry.  Each sub-write
-        keeps its own sequence number, so under srd a delayed message can
-        now be displaced by up to ``(reorder_window + 1) * cap``
-        *sequences*, not arrivals.  The cap keeps that product inside the
-        receiver's documented SEQ_MOD // 4 displacement bound
-        (semantics.py), which leaves a 2x margin against the true
-        ±SEQ_MOD // 2 unwrap window — cover for seq-carrying messages of
-        mixed wire sizes (zero-payload SEQ_ATOMICs are denser per wire
-        byte than coalesced data runs).  rc delivers per-link in order
-        (no displacement) — the cap there is payload-assembly sanity."""
-        cfg = self.net.cfg
-        if cfg.mode == "srd":
-            return max(1, (SEQ_MOD // 4) // (cfg.reorder_window + 1))
-        return 256
+        """See module-level :func:`coalesce_cap` (the cap leaves a 2x
+        margin against the true ±SEQ_MOD // 2 unwrap window — cover for
+        seq-carrying messages of mixed wire sizes: zero-payload
+        SEQ_ATOMICs are denser per wire byte than coalesced data runs)."""
+        return coalesce_cap(self.net.cfg)
 
     def _execute_batch(self, words: np.ndarray) -> None:
         """Columnar consumer fast path: decode a drained (N, 4) descriptor
@@ -304,8 +330,10 @@ class Proxy:
         is_fat = is_at & fenced                # LL completion fences
         is_sat = is_at & ~fenced               # HT seq atomics
         sends_imm = is_w | is_at
-        assert not sends_imm.any() or int(ch[sends_imm].max()) < \
-            N_CHANNELS_MAX, "imm codec carries 3 channel bits"
+        if sends_imm.any() and int(ch[sends_imm].max()) >= N_CHANNELS_MAX:
+            raise ProtocolError(f"channel {int(ch[sends_imm].max())} >= "
+                                f"{N_CHANNELS_MAX}: imm codec carries "
+                                "3 channel bits")
 
         # ---- bulk sequence assignment (order within each (dst, channel)
         # key is the descriptor order, exactly as N _next_seq calls) -------
@@ -313,7 +341,7 @@ class Proxy:
         m_seq = is_w | is_sat
         if m_seq.any():
             rows = np.flatnonzero(m_seq)
-            key = (dst[rows] << 8) | ch[rows]
+            key = (dst[rows] << CH_BITS) | ch[rows]
             order = np.argsort(key, kind="stable")
             ks = key[order]
             nk = len(ks)
@@ -324,7 +352,7 @@ class Proxy:
             reps = np.diff(np.append(starts, nk))
             base = np.empty(len(starts), np.int64)
             for j, s in enumerate(starts.tolist()):
-                k = (int(ks[s]) >> 8, int(ks[s]) & 0xFF)
+                k = (int(ks[s]) >> CH_BITS, int(ks[s]) & CH_MASK)
                 base[j] = self._seq.get(k, 0)
                 self._seq[k] = int(base[j]) + int(reps[j])
             full = np.repeat(base, reps) + \
@@ -335,17 +363,23 @@ class Proxy:
 
         # ---- vectorized immediates (same per-kind layout as pack_imm) ----
         imm = np.zeros(n, np.int64)
-        imm[is_w] = (ch[is_w] << 2) | (seq[is_w] << 5)      # ImmKind.WRITE
+        imm[is_w] = (ch[is_w] << IMM_CH_SHIFT) \
+            | (seq[is_w] << IMM_SEQ_SHIFT)                  # ImmKind.WRITE
         if is_fat.any():
             cnt = src_off[is_fat]              # 32-bit atomic operand field
-            assert int(cnt.max()) <= FENCE_COUNT_MAX, int(cnt.max())
-            imm[is_fat] = int(ImmKind.FENCE_ATOMIC) | (ch[is_fat] << 2) | \
-                (cnt << 5)
+            if int(cnt.max()) > FENCE_COUNT_MAX:
+                raise ProtocolError(f"fence count {int(cnt.max())} > "
+                                    f"{FENCE_COUNT_MAX} (21-bit imm field)")
+            imm[is_fat] = int(ImmKind.FENCE_ATOMIC) \
+                | (ch[is_fat] << IMM_CH_SHIFT) | (cnt << IMM_COUNT_SHIFT)
         if is_sat.any():
             val = src_off[is_sat]
-            assert int(val.max()) <= IMM_VAL_MAX, int(val.max())
-            imm[is_sat] = int(ImmKind.SEQ_ATOMIC) | (ch[is_sat] << 2) | \
-                (seq[is_sat] << 5) | (val << 16)
+            if int(val.max()) > IMM_VAL_MAX:
+                raise ProtocolError(f"atomic operand {int(val.max())} > "
+                                    f"{IMM_VAL_MAX} (16-bit imm field)")
+            imm[is_sat] = int(ImmKind.SEQ_ATOMIC) \
+                | (ch[is_sat] << IMM_CH_SHIFT) \
+                | (seq[is_sat] << IMM_SEQ_SHIFT) | (val << IMM_VALUE_SHIFT)
 
         # ---- coalescing: maximal runs of writes to one (dst, channel)
         # whose landing ranges are contiguous, split at the srd seq-
@@ -413,7 +447,10 @@ class Proxy:
                 for r in (range(a, b) if wa_rows else ()):
                     if r in wa_rows:
                         opd = src_l[r]
-                        assert opd <= FENCE_COUNT_MAX, opd
+                        if opd > FENCE_COUNT_MAX:
+                            raise ProtocolError(
+                                f"fence count {opd} > {FENCE_COUNT_MAX} "
+                                "(21-bit imm field)")
                         msgs.append(Message(
                             rank, dst_l[r], qp=ch_l[r], kind="imm",
                             dst_off=off_l[r], payload=None,

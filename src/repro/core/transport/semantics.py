@@ -58,6 +58,18 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.core.transport.wire_format import (FENCE_COUNT_MAX, IMM_CH_MASK,
+                                              IMM_CH_SHIFT, IMM_COUNT_MASK,
+                                              IMM_COUNT_SHIFT, IMM_KIND_MASK,
+                                              IMM_SEQ_MASK, IMM_SEQ_SHIFT,
+                                              IMM_VAL_MAX, IMM_VALUE_SHIFT,
+                                              N_CHANNELS_MAX, SEQ_MOD,
+                                              ProtocolError)
+
+__all__ = ["ImmKind", "N_CHANNELS_MAX", "SEQ_MOD", "IMM_VAL_MAX",
+           "FENCE_COUNT_MAX", "ProtocolError", "pack_imm", "unpack_imm",
+           "GuardTable", "ControlBuffer"]
+
 
 class ImmKind(IntEnum):
     WRITE = 0          # data write notification
@@ -67,23 +79,34 @@ class ImmKind(IntEnum):
     BARRIER = 3        # reserved (applies immediately)
 
 
-N_CHANNELS_MAX = 8           # channel field: 3 bits
-SEQ_MOD = 2048               # seq field: 11 bits (wire sequences wrap)
-IMM_VAL_MAX = (1 << 16) - 1  # value field: 16 bits (seq-carrying kinds)
-FENCE_COUNT_MAX = (1 << 21) - 1   # fence count field: 21 bits
+# Field widths/masks/shifts and the derived protocol constants
+# (N_CHANNELS_MAX, SEQ_MOD, IMM_VAL_MAX, FENCE_COUNT_MAX) live in
+# ``wire_format`` — the single source of truth — and are re-exported here
+# for existing import sites.
 
 
 def pack_imm(kind: ImmKind, channel: int, seq: int, value: int) -> int:
     """32-bit immediate; layout is per-kind (see module docstring).  For
     FENCE_ATOMIC, ``seq`` must be 0 (fences carry no sequence number) and
     ``value`` is the required write count (up to :data:`FENCE_COUNT_MAX`);
-    the guard id travels in the descriptor, not the immediate."""
-    assert 0 <= channel < N_CHANNELS_MAX, channel
+    the guard id travels in the descriptor, not the immediate.
+
+    Out-of-range fields raise :class:`ProtocolError` (never ``assert`` —
+    truncating a field silently corrupts the wire under ``python -O``)."""
+    if not 0 <= channel < N_CHANNELS_MAX:
+        raise ProtocolError(f"imm channel {channel} not in "
+                            f"[0, {N_CHANNELS_MAX})")
     if kind == ImmKind.FENCE_ATOMIC:
-        assert seq == 0 and 0 <= value <= FENCE_COUNT_MAX, (seq, value)
-        return int(kind) | (channel << 2) | (value << 5)
-    assert 0 <= seq < SEQ_MOD and 0 <= value <= IMM_VAL_MAX, (seq, value)
-    return int(kind) | (channel << 2) | (seq << 5) | (value << 16)
+        if seq != 0 or not 0 <= value <= FENCE_COUNT_MAX:
+            raise ProtocolError(f"fence imm seq={seq} count={value}: seq "
+                                f"must be 0 and count <= {FENCE_COUNT_MAX}")
+        return int(kind) | (channel << IMM_CH_SHIFT) \
+            | (value << IMM_COUNT_SHIFT)
+    if not 0 <= seq < SEQ_MOD or not 0 <= value <= IMM_VAL_MAX:
+        raise ProtocolError(f"imm seq={seq} value={value}: need seq < "
+                            f"{SEQ_MOD} and value <= {IMM_VAL_MAX}")
+    return int(kind) | (channel << IMM_CH_SHIFT) | (seq << IMM_SEQ_SHIFT) \
+        | (value << IMM_VALUE_SHIFT)
 
 
 _IMM_KINDS = (ImmKind.WRITE, ImmKind.FENCE_ATOMIC, ImmKind.SEQ_ATOMIC,
@@ -91,10 +114,12 @@ _IMM_KINDS = (ImmKind.WRITE, ImmKind.FENCE_ATOMIC, ImmKind.SEQ_ATOMIC,
 
 
 def unpack_imm(imm: int) -> tuple[ImmKind, int, int, int]:
-    kind = _IMM_KINDS[imm & 0x3]
+    kind = _IMM_KINDS[imm & IMM_KIND_MASK]
     if kind is ImmKind.FENCE_ATOMIC:
-        return (kind, (imm >> 2) & 0x7, 0, (imm >> 5) & 0x1FFFFF)
-    return (kind, (imm >> 2) & 0x7, (imm >> 5) & 0x7FF, imm >> 16)
+        return (kind, (imm >> IMM_CH_SHIFT) & IMM_CH_MASK, 0,
+                (imm >> IMM_COUNT_SHIFT) & IMM_COUNT_MASK)
+    return (kind, (imm >> IMM_CH_SHIFT) & IMM_CH_MASK,
+            (imm >> IMM_SEQ_SHIFT) & IMM_SEQ_MASK, imm >> IMM_VALUE_SHIFT)
 
 
 class GuardTable:
@@ -123,11 +148,14 @@ class GuardTable:
         """Register one bucket.  Ranges must not overlap (a landing address
         must resolve to exactly one guard, as with real MRs)."""
         base, extent = int(base), int(extent)
-        assert extent > 0, extent
+        if extent <= 0:
+            raise ProtocolError(f"guard range extent must be > 0, got "
+                                f"{extent}")
         i = bisect_left(self._bases, base)
-        assert (i == 0 or self._ends[i - 1] <= base) and \
-               (i == len(self._bases) or base + extent <= self._bases[i]), \
-            f"guard range [{base}, {base + extent}) overlaps a registered one"
+        if not ((i == 0 or self._ends[i - 1] <= base) and
+                (i == len(self._bases) or base + extent <= self._bases[i])):
+            raise ProtocolError(f"guard range [{base}, {base + extent}) "
+                                "overlaps a registered one")
         self._bases.insert(i, base)
         self._ends.insert(i, base + extent)
         self._gids.insert(i, int(guard_id))
@@ -244,7 +272,7 @@ class ControlBuffer:
         n = len(imms)
         if n == 0:
             return
-        ch = int(imms[0]) >> 2 & 0x7
+        ch = (int(imms[0]) >> IMM_CH_SHIFT) & IMM_CH_MASK
         dst_offs = np.asarray(dst_offs)
         # guard attribution: a proxy-coalesced run lands in one ascending
         # contiguous interval, so when its offsets are monotone and the
@@ -277,7 +305,8 @@ class ControlBuffer:
                 seen[g] = seen.get(g, 0) + c
         # the sender assigns a coalesced run consecutive sequences
         # [full0, full0 + n), so the prefix state advances in bulk
-        full0 = self._unwrap(ch, (int(imms[0]) >> 5) & 0x7FF)
+        full0 = self._unwrap(ch, (int(imms[0]) >> IMM_SEQ_SHIFT)
+                             & IMM_SEQ_MASK)
         if full0 + n - 1 > self._hi_seq[ch]:
             self._hi_seq[ch] = full0 + n - 1
         if full0 == self.next_seq[ch]:

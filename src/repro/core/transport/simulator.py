@@ -39,6 +39,9 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.core.transport.wire_format import (SRD_DISPLACEMENT_BOUND,
+                                              ProtocolError)
+
 
 @dataclass(slots=True)
 class Message:
@@ -113,8 +116,14 @@ class Network:
 
     def __init__(self, cfg: NetConfig, n_ranks: int, threadsafe: bool = True):
         # seq unwrap at the receiver (semantics.ControlBuffer) tolerates
-        # displacement < SEQ_MOD // 4 = 512 arrivals
-        assert cfg.reorder_window < 512, "reorder_window must be < 512"
+        # displacement < SEQ_MOD // 4 arrivals; the bound is derived from
+        # the wire seq width, and raised (not assert-ed) so a mis-sized
+        # window can't slip through under ``python -O``
+        if cfg.reorder_window >= SRD_DISPLACEMENT_BOUND:
+            raise ProtocolError(
+                f"reorder_window {cfg.reorder_window} >= SEQ_MOD // 4 = "
+                f"{SRD_DISPLACEMENT_BOUND}: receiver seq unwrap would be "
+                "ambiguous")
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
         self.n_ranks = n_ranks

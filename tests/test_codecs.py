@@ -6,7 +6,8 @@ import pytest
 
 from repro.core.transport.fifo import (FLAG_FENCE, FifoChannel, Op,
                                        TransferCmd, pack_cmds)
-from repro.core.transport.semantics import ImmKind, pack_imm, unpack_imm
+from repro.core.transport.semantics import (ImmKind, ProtocolError, pack_imm,
+                                            unpack_imm)
 
 # field boundary values: (dst_rank, channel, src_off, dst_off, length,
 # value, flags) at zero, max, and a mid pattern
@@ -125,13 +126,15 @@ def test_imm_codec_fence_roundtrip_boundaries(ch, count):
 
 
 def test_imm_codec_rejects_out_of_range():
-    with pytest.raises(AssertionError):
+    # explicit ProtocolError raises, not asserts: the wire contract must
+    # survive ``python -O`` (ISSUE 9)
+    with pytest.raises(ProtocolError):
         pack_imm(ImmKind.WRITE, 8, 0, 0)          # channel > 3 bits
-    with pytest.raises(AssertionError):
+    with pytest.raises(ProtocolError):
         pack_imm(ImmKind.WRITE, 0, 2048, 0)       # seq > 11 bits
-    with pytest.raises(AssertionError):
+    with pytest.raises(ProtocolError):
         pack_imm(ImmKind.WRITE, 0, 0, 1 << 16)    # value > 16 bits
-    with pytest.raises(AssertionError):
+    with pytest.raises(ProtocolError):
         pack_imm(ImmKind.FENCE_ATOMIC, 0, 1, 0)         # fences carry no seq
-    with pytest.raises(AssertionError):
+    with pytest.raises(ProtocolError):
         pack_imm(ImmKind.FENCE_ATOMIC, 0, 0, 1 << 21)   # count > 21 bits

@@ -9,9 +9,10 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.transport import (EPWorld, FLAG_FENCE, ControlBuffer,
                                   FifoChannel, GuardTable, ImmKind, Message,
-                                  NetConfig, Network, Op, Proxy,
-                                  SymmetricMemory, TransferCmd, pack_cmds,
-                                  pack_imm, unpack_cmds, unpack_imm)
+                                  NetConfig, Network, Op, ProtocolError,
+                                  Proxy, SymmetricMemory, TransferCmd,
+                                  pack_cmds, pack_imm, unpack_cmds,
+                                  unpack_imm)
 
 
 # ------------------------------------------------------------------ FIFO --
@@ -172,7 +173,7 @@ def test_guard_table_resolves_ranges_and_rejects_overlap():
     assert gt.resolve(100) == 7 and gt.resolve(149) == 7
     assert gt.resolve(150) is None and gt.resolve(999) is None
     assert gt.resolve(1000) == 9 and gt.resolve(1008) is None
-    with pytest.raises(AssertionError):
+    with pytest.raises(ProtocolError):
         gt.register(140, 20, 11)          # overlaps [100, 150)
 
 

@@ -712,3 +712,219 @@ def test_ep_replicated_conformance_property(seed, mode, proto, factor,
     """Hypothesis form: randomized skew/replication/transport points with
     shrinking toward a minimal failing configuration."""
     _run_ep_replicated_case(mode, proto, factor, seed, alpha=alpha)
+
+
+# ======================================================================
+# Part 6: static protocol verification (ISSUE 9)
+# ======================================================================
+# Every stream the generator emits must verify clean; seeded invariant-
+# breaking mutants must each be rejected with the *specific* rule id the
+# catalog assigns them — including an exact reconstruction of PR 4's
+# 6-bit slot-aliasing bug (EPV-005).
+from repro.core.plan import receive_bucket_table, wire_layout
+from repro.core.transport.ep_executor import (SessSlot,
+                                              build_command_streams)
+from repro.core.transport.fifo import (FLAG_FENCE, Op, pack_cmds,
+                                       unpack_cmds)
+from repro.analysis import verify
+from repro.analysis.verify import verify_session_slots, verify_stream
+
+
+def _build_ll_cs(wdt="fp32", eps=4, seed=0, n_channels=4, R=2, Tl=6, K=2,
+                 D=8, ti=None):
+    """A clean LL CommandStreams in the same memory layout EPWorld uses:
+    send region, registered receive buckets, unregistered return region."""
+    rng = np.random.default_rng(seed)
+    E = eps * R
+    if ti is None:
+        ti = rng.integers(0, E, size=(R, Tl, K)).astype(np.int32)
+    R, Tl, K = ti.shape
+    cap = Tl * K
+    tb = 4 * D
+    wb = wire_layout(D, wdt).token_bytes
+    send0 = 0
+    recv0 = Tl * wb
+    ret0 = recv0 + R * eps * cap * wb
+    return build_command_streams(ti, E, eps, cap, tb, n_channels,
+                                 send0, recv0, ret0, wire_bytes=wb), \
+        n_channels
+
+
+def _rule_ids(findings):
+    return {f.rule for f in findings}
+
+
+def _repack(words, **mut):
+    """Unpack a descriptor batch, override whole field columns (or single
+    rows via (row, value) tuples), repack."""
+    c = unpack_cmds(np.asarray(words).reshape(-1, 4))
+    f = {k: np.array(getattr(c, k)) for k in
+         ("op", "dst_rank", "channel", "src_off", "dst_off", "length",
+          "value", "flags")}
+    for k, v in mut.items():
+        if isinstance(v, tuple):
+            f[k][v[0]] = v[1]
+        else:
+            f[k] = v
+    return pack_cmds(f["op"], f["dst_rank"], f["channel"], f["src_off"],
+                     f["dst_off"], f["length"], f["value"], f["flags"])
+
+
+@pytest.mark.parametrize("mode", ["rc", "srd"])
+@pytest.mark.parametrize("wdt", ["fp32", "fp8", "int8"])
+def test_verify_accepts_generated_ll_streams(mode, wdt):
+    """Zero findings on every clean generator output across the
+    {rc, srd} x {fp32, fp8, int8} LL matrix (several seeds and shapes,
+    including the >63-experts-per-rank regime)."""
+    for eps, seed in ((1, 0), (4, 1), (64, 2), (65, 3)):
+        cs, nc = _build_ll_cs(wdt, eps=eps, seed=seed)
+        findings = verify(cs, net_cfg=NetConfig(mode=mode, seed=seed),
+                          n_channels=nc)
+        assert findings == [], [str(f) for f in findings]
+
+
+@pytest.mark.parametrize("mode", ["rc", "srd"])
+@pytest.mark.parametrize("wdt", ["fp32", "fp8", "int8"])
+def test_verifier_live_in_ep_world_ht_and_ll(mode, wdt):
+    """EPWorld calls verify_or_raise on every build (LL streams, session
+    layouts) — a full run across the {rc, srd} x {ll, ht} x wire-dtype
+    matrix completing is the verifier accepting the real executor's
+    output."""
+    for proto in ("ll", "ht"):
+        _run_ep_wire_case(mode, proto, 4, wdt, threaded=False, seed=5)
+
+
+def test_mutant_channel_overflow_epv001():
+    """Channel id past the 3-bit immediate field."""
+    cs, nc = _build_ll_cs()
+    bad = cs._replace(writes=_repack(cs.writes, channel=(0, 8)))
+    assert "EPV-001" in _rule_ids(verify(bad, n_channels=8))
+
+
+def test_mutant_fence_count_overflow_epv002():
+    """Fence count past the 21-bit immediate count field."""
+    cs, nc = _build_ll_cs()
+    bad = cs._replace(fences=_repack(cs.fences,
+                                     src_off=(0, 2 ** 21)))
+    ids = _rule_ids(verify(bad, n_channels=nc))
+    assert "EPV-002" in ids
+
+
+def test_mutant_atomic_operand_overflow_epv003():
+    """Standalone (non-fence) atomic operand past the 16-bit value field —
+    the HT chunk-id width bug class."""
+    row = pack_cmds(int(Op.ATOMIC), 1, 0, 70000, 3, 0, 0)  # no FLAG_FENCE
+    ids = _rule_ids(verify_stream(row))
+    assert ids == {"EPV-003"}
+    assert "EPV-003" not in _rule_ids(
+        verify_stream(pack_cmds(int(Op.ATOMIC), 1, 0, 70000, 3, 0, 0,
+                                FLAG_FENCE)))   # fences use the count field
+
+
+def test_mutant_overlapping_guard_ranges_epv004():
+    """Doubled guard extents: adjacent receive buckets overlap."""
+    cs, nc = _build_ll_cs()
+    bases, extents, gids = cs.guard_table
+    bad = cs._replace(guard_table=(bases, np.asarray(extents) * 2, gids))
+    assert "EPV-004" in _rule_ids(verify(bad, n_channels=nc))
+
+
+def test_pr4_slot_aliasing_reconstruction_epv005():
+    """Pinned regression: PR 4's seed bug, reconstructed.  The 6-bit slot
+    codec keyed guards by ``expert % 64``, so at 65 experts/rank two
+    buckets share a guard id — their write counts merge and fences fire
+    early.  The verifier must reject this statically (EPV-005 duplicate
+    id, EPV-007 merged counts)."""
+    eps = 65
+    # routing that lands tokens in both buckets (src 0, expert-local 0)
+    # and (src 0, expert-local 64) — exactly the pair that aliases to
+    # guard id 0 under the seed's % 64 keying
+    ti = np.array([[[0, 64], [64, 3], [0, 7], [1, 2]],
+                   [[65, 129], [5, 6], [70, 100], [8, 9]]], np.int32)
+    cs, nc = _build_ll_cs(eps=eps, ti=ti)
+    bases, extents, gids = cs.guard_table
+    aliased = np.asarray(gids) % 64                  # the seed's keying
+    fences = _repack(cs.fences,
+                     dst_off=np.asarray(unpack_cmds(
+                         np.asarray(cs.fences).reshape(-1, 4)).dst_off) % 64)
+    bad = cs._replace(guard_table=(bases, extents, aliased), fences=fences)
+    ids = _rule_ids(verify(bad, n_channels=nc))
+    assert "EPV-005" in ids, "duplicate guard id not flagged"
+    assert "EPV-007" in ids, "merged fence counts not flagged"
+    # and the clean wide-id table at the same shape verifies clean
+    assert verify(cs, n_channels=nc) == []
+
+
+def test_mutant_write_straddles_guard_epv006():
+    """A dispatch write whose landing range crosses a bucket boundary
+    (inline scale block creeping past the registered extent)."""
+    cs, nc = _build_ll_cs(wdt="fp8")
+    c = unpack_cmds(np.asarray(cs.writes).reshape(-1, 4))
+    bases, extents, gids = cs.guard_table
+    bad = cs._replace(writes=_repack(
+        cs.writes, length=(0, int(c.length[0]) + int(np.max(extents)))))
+    assert "EPV-006" in _rule_ids(verify(bad, n_channels=nc))
+
+
+def test_mutant_fence_count_off_by_one_epv007():
+    """Fence requiring one more write than the stream sends."""
+    cs, nc = _build_ll_cs()
+    c = unpack_cmds(np.asarray(cs.fences).reshape(-1, 4))
+    bad = cs._replace(fences=_repack(cs.fences,
+                                     src_off=(0, int(c.src_off[0]) + 1)))
+    ids = _rule_ids(verify(bad, n_channels=nc))
+    assert ids == {"EPV-007"}
+
+
+def test_mutant_reorder_window_epv008():
+    """Raw NetConfig with a reorder window at the seq-unwrap bound — the
+    simulator refuses to construct this; the verifier flags it statically
+    (both the window itself and the cap x window product)."""
+    cfg = NetConfig(mode="srd", reorder_window=600)
+    findings = verify(net_cfg=cfg)
+    assert [f.rule for f in findings] == ["EPV-008", "EPV-008"]
+    assert verify(net_cfg=NetConfig(mode="rc", reorder_window=600)) == []
+
+
+def test_mutant_overlapping_session_slots_epv009():
+    """Two session layers sharing memory / guard ids / adjacent channels."""
+    a = SessSlot(send0=0, recv0=64, mid0=128, ret0=192, end=256,
+                 guard0=0, ch0=0, ncl=2)
+    b = SessSlot(send0=200, recv0=264, mid0=328, ret0=392, end=456,
+                 guard0=0, ch0=0, ncl=2)       # overlaps a in all three
+    ids = {f.rule for f in verify_session_slots([a, b], n_channels=4,
+                                                counter_stride=128)}
+    assert ids == {"EPV-009"}
+    c = SessSlot(send0=256, recv0=320, mid0=384, ret0=448, end=512,
+                 guard0=128, ch0=2, ncl=2)
+    assert verify_session_slots([a, c], n_channels=4,
+                                counter_stride=128) == []
+
+
+def test_mutant_unknown_op_epv010():
+    """BARRIER is a reserved opcode with no consumer path."""
+    cs, nc = _build_ll_cs()
+    bad = cs._replace(writes=_repack(cs.writes, op=(0, int(Op.BARRIER))))
+    ids = _rule_ids(verify(bad, n_channels=nc))
+    assert "EPV-010" in ids
+
+
+def test_mutant_combine_into_guarded_range_epv012():
+    """A combine write relocated into a registered receive bucket — it
+    would count toward (and prematurely fire) a dispatch fence."""
+    cs, nc = _build_ll_cs()
+    bases, _, _ = cs.guard_table
+    bad = cs._replace(combines=_repack(cs.combines,
+                                       dst_off=(0, int(np.min(bases)))))
+    ids = _rule_ids(verify(bad, n_channels=nc))
+    assert "EPV-012" in ids
+
+
+def test_verify_or_raise_lists_rule_ids():
+    """The raising form names the violated rules in its message."""
+    from repro.analysis import verify_or_raise
+    from repro.core.transport import ProtocolError
+    cs, nc = _build_ll_cs()
+    bad = cs._replace(writes=_repack(cs.writes, op=(0, int(Op.BARRIER))))
+    with pytest.raises(ProtocolError, match="EPV-010"):
+        verify_or_raise(bad, n_channels=nc)
