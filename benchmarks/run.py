@@ -20,12 +20,13 @@ HOST_BENCHES = [
     "benchmarks.fig15_fifo",
     "benchmarks.fig17_proxy_threads",
     "benchmarks.bench_transport",
+    # event-clock serving engine (deterministic, 1 process)
+    "benchmarks.fig13_serving",
 ]
 DEVICE_BENCHES = [
     "benchmarks.fig08_dispatch_combine",
     "benchmarks.bench_kernels",
     "benchmarks.fig16_ep_sweep",
-    "benchmarks.fig13_serving",
     "benchmarks.fig14_training",
 ]
 
@@ -41,7 +42,8 @@ REGRESSION_SLACK_US = 100.0
 # speed) are gated at EXACT equality: any drift means the transport changed
 # behaviour, not that the machine was busy.
 EXACT_PREFIXES = ("fig17_counters/", "bench_transport/counters/",
-                  "fig16_ep_sweep/skew_clock/", "fig14_training/counters/")
+                  "fig16_ep_sweep/skew_clock/", "fig14_training/counters/",
+                  "fig13_serving/counters/")
 # Wall-clock rows that flap 1.0-1.7x between back-to-back runs of
 # IDENTICAL code (real-thread benches contending for the host's cores;
 # the bench_transport scalar-vs-columnar A/B pair under CI load), so any

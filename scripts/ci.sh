@@ -212,15 +212,56 @@ print(f"ci.sh: training-pipeline smoke OK (EP=8 L=2 "
       f"{s['speedup']:.2f}x, drains {s['drains_serial']} -> 1)")
 EOF
 
-# Benchmark smoke: two host benchmarks end-to-end (fig15 FIFO stress +
-# the bench_transport batched-path microbench, whose counter rows are
-# exact-gated), plus the machine-readable results file the perf trajectory
-# is tracked with across PRs, gated against the committed baseline (fails
-# on >25% us_per_call regressions; counter rows must match exactly).
+# Serving smoke (DESIGN.md §18): a short Poisson run through the
+# continuous-batching engine on the event clock — every request completes,
+# the run is bit-deterministic (exact counters), the persistent session
+# quiesces clean after the last microbatch, and the PR 9 verifier (already
+# live on every microbatch's stream builds) re-checks the session slot
+# layout with zero findings.  The naive per-layer path must cost more
+# event-clock time on the same schedule.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+from repro.analysis.verify import verify_session_slots
+from repro.serving import EngineConfig, ServingEngine, poisson_arrivals
+
+def run(step_mode):
+    cfg = EngineConfig(n_layers=2, n_experts=8, top_k=2, d_model=16,
+                       d_ff=32, ep_degree=4, token_budget=16,
+                       prefill_chunk=8, block_size=8, n_blocks=64,
+                       step_mode=step_mode, nonmoe_us=10.0, seed=0)
+    eng = ServingEngine(cfg)
+    eng.submit_all(poisson_arrivals(50_000.0, 8, seed=11,
+                                    prompt_len=(6, 20), gen_len=(3, 8)))
+    return eng, eng.run()
+
+eng, s = run("pipelined")
+_, s2 = run("pipelined")
+assert s == s2, "serving engine is not deterministic"
+assert s["sched_completed"] == 8 and s["kv_allocs"] == s["kv_frees"], s
+assert s["drains"] == s["steps"], s                # one drain/microbatch
+(world,) = eng.backend._sessions.values()
+assert not world.net.pending, "session left traffic in flight"
+fs = verify_session_slots(world._slots, n_channels=world.n_channels,
+                          counter_stride=world._counter_stride)
+assert fs == [], [str(f) for f in fs]
+_, n = run("per_layer")
+for k in (k for k in s if k.startswith("sched_")):
+    assert s[k] == n[k], k                        # identical schedule
+assert s["elapsed_us"] < n["elapsed_us"], (s["elapsed_us"], n["elapsed_us"])
+print(f"ci.sh: serving smoke OK ({s['generated_tokens']} tokens, "
+      f"{s['steps']} microbatches, session {s['elapsed_us']:.0f}us vs "
+      f"naive {n['elapsed_us']:.0f}us, verifier clean)")
+EOF
+
+# Benchmark smoke: three host benchmarks end-to-end (fig15 FIFO stress,
+# the bench_transport batched-path microbench, and the fig13 serving load
+# sweep — both with exact-gated counter rows), plus the machine-readable
+# results file the perf trajectory is tracked with across PRs, gated
+# against the committed baseline (fails on >25% us_per_call regressions;
+# counter rows must match exactly).
 BENCH_JSON="$(mktemp -t bench_smoke.XXXXXX.json)"
 trap 'rm -f "$BENCH_JSON"' EXIT
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --only fig15,bench_transport \
+    python -m benchmarks.run --only fig15,bench_transport,fig13_serving \
     --json "$BENCH_JSON" --compare BENCH_results.json > /dev/null
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} BENCH_JSON="$BENCH_JSON" python - <<'EOF'
 import json, os

@@ -224,3 +224,152 @@ class SimulatedRDMABackend:
             out.reshape(T, D),
             {"dropped": np.float32(0.0), "load_phys": load_phys,
              "imbalance": np.float32(planlib.load_imbalance(load_phys))})
+
+    # per-step counters aggregated by dispatch_step (exact-gated rows)
+    _STEP_COUNTERS = ("drains_per_step", "cmds_per_step",
+                      "dispatch_payload_bytes", "dispatch_wire_bytes",
+                      "dispatch_msgs")
+    # ibv_reg_mr page-pin cost, us per 4 KiB page — the per-call memory
+    # registration a persistent session pays once instead of every call
+    _PIN_US_PER_PAGE = 0.3
+
+    def _rendezvous_us(self, R: int, ctrl_bytes: int) -> float:
+        """Event-clock cost of the control-plane rendezvous a NON-session
+        dispatch must run before payload flies: every receiver advertises
+        its bucket layout (base addr + rkey + capacity per local expert,
+        ``ctrl_bytes``) to every sender, then an ack barrier confirms all
+        sides saw it.  Simulated with real control messages on a scratch
+        :class:`Network` under the backend's own ``NetConfig`` (same
+        latency/bandwidth/jitter model as the payload path), so the number
+        scales with fabric parameters instead of being a magic constant.
+        Persistent sessions run this ONCE at open (DESIGN §16/§18)."""
+        key = (R, ctrl_bytes)
+        cache = getattr(self, "_rdv_cache", None)
+        if cache is None:
+            cache = self._rdv_cache = {}
+        v = cache.get(key)
+        if v is not None:
+            return v
+        from repro.core.transport.simulator import Message, Network
+        net = Network(self.net_cfg, R, threadsafe=False)
+        for r in range(R):
+            net.register(r, lambda m: None)
+        for phase_bytes in (ctrl_bytes, 8):      # advertise, then ack
+            net.send_batch([
+                Message(src=r, dst=s, qp=0, kind="write", dst_off=0,
+                        payload=np.zeros(phase_bytes, np.uint8), imm=None)
+                for r in range(R) for s in range(R) if s != r])
+            while net.pending:
+                net.deliver_ready()
+        cache[key] = net.clock_us
+        return net.clock_us
+
+    def _setup_us(self, world) -> float:
+        """Per-call session-open cost for ``world``'s geometry: pin+register
+        the receive buckets and return region (page-granular, all ranks in
+        parallel), then the advertisement rendezvous."""
+        reg_bytes = (world.n_experts * world.capacity * world.tok_bytes
+                     + world.capacity * world.top_k * world.d * 4)
+        reg_us = -(-reg_bytes // 4096) * self._PIN_US_PER_PAGE
+        ctrl = 64 + (world.n_experts // world.n_ranks) * 24
+        return reg_us + self._rendezvous_us(world.n_ranks, ctrl)
+
+    def dispatch_step(self, spec, xs, tis, tws, wg, wu, wd, *,
+                      nonmoe_fwd_us: float = 0.0, mode: str = "pipelined"):
+        """One full model step for a serving microbatch: ``L`` MoE layers
+        worth of dispatch+combine on the event clock, with a non-MoE
+        (attention/norm) compute segment of ``nonmoe_fwd_us`` ahead of each
+        layer.  ``xs/tis/tws`` are length-``session_layers`` lists of
+        ``(T, D)`` / ``(T, K)`` arrays (``top_idx < 0`` rows are padding and
+        move no traffic); ``wg/wu/wd`` are the shared per-expert FFN weights.
+
+        ``mode`` selects the step driver — the serving A/B switch:
+
+        - ``"pipelined"`` — persistent session, all layers' command streams
+          prepared up front, rank-local cross-layer overlap, ONE quiesce
+          drain per step (``EPWorld.run_step_pipelined``);
+        - ``"serial"`` — same persistent session, layer-serialized drains
+          (isolates the cross-layer contribution);
+        - ``"per_layer"`` — the naive comparator: a FRESH non-session world
+          per layer (registration, guard tables and buckets rebuilt each
+          call), clocks summed across layers.  Per-expert overlap stays ON
+          inside every layer in all three modes.
+
+        Returns ``(outs, elapsed_us, stats)``: per-layer ``(T, D)`` outputs,
+        the step's event-clock span (including the L non-MoE segments), and
+        the aggregated per-step transport counters.
+        """
+        from repro.core.transport.ep_executor import EPWorld
+
+        assert spec.mode == "ll", "serving decode dispatch is LL-mode"
+        assert getattr(spec, "placement", None) is None, \
+            "dispatch_step takes pre-translated physical routing tables"
+        assert mode in ("pipelined", "serial", "per_layer"), mode
+        L = len(xs)
+        assert len(tis) == L and len(tws) == L and L > 0
+        x0 = np.asarray(xs[0], np.float32)
+        T, D = x0.shape
+        R = spec.degree
+        assert T % R == 0, f"token count {T} not divisible by EP degree {R}"
+        Tl = T // R
+        K = np.asarray(tis[0]).shape[1]
+        E_phys = spec.n_experts
+        wire_dtype = getattr(spec, "wire_dtype", "fp32")
+        xs_r = [np.asarray(x, np.float32).reshape(R, Tl, D) for x in xs]
+        tis_r = [np.asarray(t).reshape(R, Tl, K) for t in tis]
+        tws_r = [np.asarray(w, np.float32).reshape(R, Tl, K) for w in tws]
+
+        if mode == "per_layer":
+            outs, elapsed = [], 0.0
+            stats = dict.fromkeys(self._STEP_COUNTERS, 0)
+            for l in range(L):
+                world = EPWorld(n_ranks=R, n_experts=E_phys, top_k=K, d=D,
+                                capacity=Tl * K, net_cfg=self.net_cfg,
+                                n_channels=self.n_channels,
+                                columnar=self.columnar,
+                                coalesce=self.coalesce,
+                                wire_dtype=wire_dtype)
+                t0 = world.net.clock_us
+                world.net.advance(nonmoe_fwd_us)
+                # non-persistent dispatch: registration + rendezvous per
+                # call (what the session amortizes to once at open)
+                world.net.advance(self._setup_us(world))
+                out = world.run(xs_r[l], tis_r[l], tws_r[l], wg, wu, wd)
+                elapsed += world.net.clock_us - t0
+                for k in self._STEP_COUNTERS:
+                    stats[k] += int(world.timeline.get(k, 0))
+                outs.append(out.reshape(T, D))
+                self.last_world = world
+            return outs, elapsed, stats
+
+        assert self.session_layers == L, \
+            f"backend session_layers={self.session_layers} != {L} layers"
+        skey = (spec.mode, R, E_phys, K, D, Tl, spec.chunks, wire_dtype)
+        world = self._sessions.get(skey)
+        opened = world is None
+        if opened:
+            world = EPWorld(n_ranks=R, n_experts=E_phys, top_k=K, d=D,
+                            capacity=Tl * K, net_cfg=self.net_cfg,
+                            n_channels=self.n_channels,
+                            columnar=self.columnar, coalesce=self.coalesce,
+                            wire_dtype=wire_dtype, session=True,
+                            n_layers=L, mirror=self.session_mirror)
+            self._sessions[skey] = world
+        world.begin_step()
+        t0 = world.net.clock_us
+        if opened:
+            # session open: registration + rendezvous ONCE, charged to the
+            # first step (the naive path re-pays it every layer, every step)
+            world.net.advance(self._setup_us(world))
+        world.net.advance(nonmoe_fwd_us)     # leading non-MoE segment
+        runner = (world.run_step_pipelined if mode == "pipelined"
+                  else world.run_step_serial)
+        outs = runner(xs_r, tis_r, tws_r, wg, wu, wd,
+                      nonmoe_fwd_us=nonmoe_fwd_us)
+        elapsed = world.net.clock_us - t0
+        assert not world.net.pending, "step ended with traffic in flight"
+        stats = {k: int(world.timeline.get(k, 0))
+                 for k in self._STEP_COUNTERS}
+        self.last_world = world
+        self._layer_cursor = 0
+        return [o.reshape(T, D) for o in outs], elapsed, stats

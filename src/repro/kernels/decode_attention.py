@@ -95,3 +95,128 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
         interpret=interpret,
     )(jnp.asarray(pos, jnp.int32)[None], qg, kT, vT)
     return out.reshape(B, H, D)
+
+
+# ---------------------------------------------------------------- paged ---
+def _dec_paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                      m_ref, l_ref, acc_ref, *, bs: int, nb: int):
+    """Paged flash-decoding step: grid cell (b, h, j) covers physical block
+    ``bt_ref[b, j]`` of sequence b.  Unallocated (-1) and fully-dead blocks
+    are ``pl.when``-skipped — the same trick the grouped-matmul kernels use
+    for unoccupied expert rows; their DMA reads a clamped (always-valid)
+    block index whose data is never consumed."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[b]
+
+    @pl.when((bt_ref[b, j] >= 0) & (j * bs <= pos))
+    def _():
+        q = q_ref[0, 0]                       # (rep, d)
+        k = k_ref[0, :, 0, :]                 # (bs, d) pool block, kv head h
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * (1.0 / math.sqrt(q.shape[-1]))
+        kpos = j * bs + jax.lax.broadcasted_iota(
+            jnp.int32, (q.shape[0], bs), 1)
+        s = jnp.where(kpos <= pos, s, -jnp.inf)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[:, None])
+        corr = jnp.exp(m_prev - m_safe)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention_paged(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_tables: jax.Array,
+                           pos: jax.Array, *,
+                           interpret: bool = False) -> jax.Array:
+    """Flash decoding through a paged KV cache (DESIGN.md §18).
+
+    q: (B, H, D) one query per sequence; k_pool/v_pool: (NB, bs, Hkv, D)
+    physical block pools (``bs`` tokens per block); block_tables: (B, nb)
+    int32 physical block ids, -1 = unallocated; pos: (B,) int32 per-sequence
+    position of the newest token.  Sequence b attends to global positions
+    [0, pos[b]], found at ``k_pool[block_tables[b, p // bs], p % bs]``.
+    GQA exactly as the contiguous kernel.  Returns (B, H, D).
+
+    The block table and positions ride scalar prefetch
+    (``PrefetchScalarGridSpec``) so the k/v index maps can indirect through
+    ``block_tables`` when scheduling block DMAs — unallocated entries are
+    clamped to block 0 for a safe (discarded) read and skipped in-kernel.
+    """
+    B, H, D = q.shape
+    NB, bs, Hkv = k_pool.shape[:3]
+    nb = block_tables.shape[1]
+    assert block_tables.shape[0] == B and pos.shape == (B,)
+    rep = H // Hkv
+    qg = q.reshape(B, Hkv, rep, D)
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    def _kv_map(b, h, j, bt_ref, pos_ref):
+        # clamp -1 (unallocated) to block 0: the DMA must target a real
+        # block, the kernel's liveness test discards whatever it carried
+        del pos_ref
+        return (jnp.maximum(bt_ref[b, j], 0), 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,               # (clamped) block table, pos
+        grid=(B, Hkv, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, D),
+                         lambda b, h, j, bt_ref, pos_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D), _kv_map),
+            pl.BlockSpec((1, bs, 1, D), _kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, D),
+                               lambda b, h, j, bt_ref, pos_ref: (b, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((rep,), jnp.float32),
+                        pltpu.VMEM((rep,), jnp.float32),
+                        pltpu.VMEM((rep, D), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_dec_paged_kernel, bs=bs, nb=nb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, D), q.dtype),
+        interpret=interpret,
+    )(bt, jnp.asarray(pos, jnp.int32),
+      qg, k_pool.reshape(NB, bs, Hkv, D), v_pool.reshape(NB, bs, Hkv, D))
+    return out.reshape(B, H, D)
+
+
+def decode_attention_paged_ref(q, k_pool, v_pool, block_tables, pos):
+    """jnp reference for the paged kernel: gather each sequence's blocks
+    into a contiguous cache, then masked single-query attention."""
+    B, H, D = q.shape
+    NB, bs, Hkv = k_pool.shape[:3]
+    nb = block_tables.shape[1]
+    rep = H // Hkv
+    bt = jnp.maximum(jnp.asarray(block_tables, jnp.int32), 0)
+    kc = k_pool[bt].reshape(B, nb * bs, Hkv, D)     # (B, S, Hkv, D)
+    vc = v_pool[bt].reshape(B, nb * bs, Hkv, D)
+    qg = q.reshape(B, Hkv, rep, D)
+    s = jnp.einsum("bhrd,bshd->bhrs", qg, kc) / math.sqrt(D)
+    kpos = jnp.arange(nb * bs)[None, None, None, :]
+    s = jnp.where(kpos <= jnp.asarray(pos)[:, None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhrs,bshd->bhrd", p, vc)
+    return o.reshape(B, H, D).astype(q.dtype)

@@ -2,10 +2,17 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2_moe_a2_7b \
       --reduced --batch 4 --prompt-len 32 --gen 16
+
+Prefill is ONE batched forward pass (``model_zoo.prefill``) that fills the
+KV cache for the whole prompt, then decode proceeds token-at-a-time in LL
+mode — the prefill/decode split the EP-native serving engine
+(``repro.serving``) schedules continuously.  ``--ep-backend``/``--wire-dtype``
+mirror ``launch/train.py``.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 
@@ -21,6 +28,12 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--mesh", default="none", choices=["none", "local"])
     ap.add_argument("--local-model-axis", type=int, default=4)
+    ap.add_argument("--ep-backend", default="",
+                    help="EP transport backend (e.g. jax_collectives, "
+                         "simulated_rdma); default: the config's choice")
+    ap.add_argument("--wire-dtype", default="",
+                    choices=["", "fp32", "fp8", "int8"],
+                    help="dispatch wire payload dtype (DESIGN §14)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -36,6 +49,14 @@ def main(argv=None):
     if args.reduced:
         cfg = reduced_config(cfg, n_layers=args.layers, d_model=args.d_model,
                              vocab=args.vocab)
+    moe_over = {}
+    if args.ep_backend:
+        moe_over["ep_backend"] = args.ep_backend
+    if args.wire_dtype:
+        moe_over["wire_dtype"] = args.wire_dtype
+    if moe_over:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, **moe_over))
     dist = None
     if args.mesh == "local":
         mesh = make_bench_mesh(len(jax.devices()), model=args.local_model_axis)
@@ -50,23 +71,39 @@ def main(argv=None):
 
     step = jax.jit(partial(Z.decode_step, cfg, dist=dist, moe_mode="ll"),
                    donate_argnums=(1,))
-    # prefill via decode steps (simple serving path; HT prefill is the
-    # benchmarked path in benchmarks/fig13_serving.py)
+    batched_prefill = (not cfg.mamba.enabled
+                       and (dist is None or dist.model_axis is None))
     t0 = time.perf_counter()
-    tok = prompts[:, :1]
     out_tokens = []
-    for t in range(max_len - 1):
-        logits, cache = step(params, cache, tok, jnp.int32(t))
-        if t + 1 < args.prompt_len:
+    if batched_prefill:
+        # ONE forward pass fills cache[:, :prompt_len] and yields the
+        # first generated token from the last prompt position's logits
+        pre = jax.jit(partial(Z.prefill, cfg, moe_mode="ht"),
+                      donate_argnums=(1,))
+        logits, cache = pre(params, cache, prompts)
+        t_first = time.perf_counter() - t0
+        nxt = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)
+        tok = nxt[:, None].astype(jnp.int32)
+        out_tokens.append(tok)
+        t_start = args.prompt_len
+    else:
+        # sharded-cache / mamba fallback: prefill via decode steps
+        tok = prompts[:, :1]
+        for t in range(args.prompt_len - 1):
+            logits, cache = step(params, cache, tok, jnp.int32(t))
             tok = prompts[:, t + 1:t + 2]
-        else:
-            nxt = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)
-            tok = nxt[:, None].astype(jnp.int32)
-            out_tokens.append(tok)
+        t_first = None
+        t_start = args.prompt_len - 1
+    for t in range(t_start, max_len - 1):
+        logits, cache = step(params, cache, tok, jnp.int32(t))
+        nxt = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)
+        tok = nxt[:, None].astype(jnp.int32)
+        out_tokens.append(tok)
     dt = time.perf_counter() - t0
     total = B * len(out_tokens)
+    ttft = f", ttft {t_first * 1e3:.0f}ms" if t_first is not None else ""
     print(f"[serve] generated {total} tokens in {dt:.2f}s "
-          f"({total / dt:.1f} tok/s), first sequence: "
+          f"({total / dt:.1f} tok/s{ttft}), first sequence: "
           f"{[int(t[0, 0]) for t in out_tokens[:8]]}")
     return 0
 

@@ -23,10 +23,11 @@ from repro.configs.base import ModelConfig
 from repro.core.moe import moe_apply, moe_init
 from repro.distributed.sharding import DistCtx
 from repro.models import mamba as mamba_mod
-from repro.models.layers import (AttnParams, KVCache, MLPParams, apply_rope,
-                                 attention, attn_init, decode_attention_local,
-                                 decode_qkv, flash_attention_blocked,
-                                 mlp_init, rmsnorm, rmsnorm_init, swiglu)
+from repro.models.layers import (AttnParams, KVCache, MLPParams, _qkv,
+                                 apply_rope, attention, attn_init,
+                                 decode_attention_local, decode_qkv,
+                                 flash_attention_blocked, mlp_init, rmsnorm,
+                                 rmsnorm_init, swiglu)
 
 Array = jax.Array
 
@@ -312,6 +313,52 @@ def block_decode(cfg: ModelConfig, dist: Optional[DistCtx], p: dict,
     h = rmsnorm(x, p["ln2"], cfg.norm_eps)
     if "moe" in p:
         h, aux = moe_apply(cfg, dist, p["moe"], h, mode=moe_mode)
+    elif "mlp" in p:
+        h = swiglu(MLPParams(**{k: p["mlp"][k]
+                                for k in ("w_gate", "w_up", "w_down")}), h)
+    else:
+        h = jnp.zeros_like(h)
+    return x + h, cache, aux
+
+
+def block_prefill(cfg: ModelConfig, dist: Optional[DistCtx], p: dict,
+                  x: Array, cache: BlockCache, positions: Array,
+                  *, moe_mode: str = "ht",
+                  moe_chunks: int = 1) -> tuple[Array, BlockCache, dict]:
+    """Batched prompt prefill: x (B, S, D) -> (x', cache', aux).
+
+    Causal attention over the whole prompt while the projected k/v land in
+    ``cache[:, :S]`` in ONE ``dynamic_update_slice`` — the batched
+    replacement for S ``block_decode`` calls (the serving launcher's old
+    placeholder).  Local-cache path only: a model-axis mesh shards the
+    cache over chips (``_decode_attn_dist``), where prefill stays with the
+    distributed decode loop.
+    """
+    aux = {}
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if "attn" in p:
+        ap = _attn_params(cfg, p["attn"])
+        q, k_new, v_new = _qkv(cfg, ap, h, positions)
+        S = x.shape[1]
+        blk = min(512, S)
+        o = flash_attention_blocked(q, k_new, v_new, causal=True,
+                                    q_block=blk, kv_block=blk)
+        kc = lax.dynamic_update_slice_in_dim(
+            cache.k, k_new.astype(cache.k.dtype), 0, 1)
+        vc = lax.dynamic_update_slice_in_dim(
+            cache.v, v_new.astype(cache.v.dtype), 0, 1)
+        cache = cache._replace(k=kc, v=vc)
+        h = jnp.einsum("bshk,hkd->bsd", o, ap.wo.astype(h.dtype))
+    elif "mamba" in p:
+        raise NotImplementedError(
+            "batched prefill needs the post-prompt recurrent state; mamba "
+            "layers prefill through the per-token decode loop")
+    x = x + h
+
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        h, aux = moe_apply(cfg, dist, p["moe"], h, mode=moe_mode,
+                           chunks=moe_chunks)
     elif "mlp" in p:
         h = swiglu(MLPParams(**{k: p["mlp"][k]
                                 for k in ("w_gate", "w_up", "w_down")}), h)

@@ -230,6 +230,51 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return {f"slot{s}": stack_slot(s) for s in range(period)}
 
 
+def prefill(cfg: ModelConfig, params: dict, cache: dict, tokens: Array,
+            *, dist: Optional[DistCtx] = None, moe_mode: str = "ht",
+            unroll: bool = False) -> tuple[Array, dict]:
+    """Batched prompt prefill: ONE forward pass over tokens (B, S) that
+    fills ``cache[:, :S]`` for every attention layer and returns the
+    last-position logits (B, V_pad) — the single-pass replacement for S
+    ``decode_step`` calls.  Local-cache path (no model-axis sharding) and
+    attention-only stacks; mamba archs keep the per-token loop."""
+    assert dist is None or dist.model_axis is None, \
+        "batched prefill is the local-cache path; sharded caches decode"
+    assert not cfg.mamba.enabled, "mamba prefill goes through decode_step"
+    period, n_periods = scan_period(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    cparams = cast_params(params, dtype)
+    x = B.vocab_embed(dist, cparams["embed"], tokens)
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (x.shape[0], S))
+
+    def period_body(x, scanned):
+        slot_params, slot_cache = scanned
+        new_cache = {}
+        for s in range(period):
+            x, c2, _ = B.block_prefill(cfg, dist, slot_params[f"slot{s}"], x,
+                                       slot_cache[f"slot{s}"], positions,
+                                       moe_mode=moe_mode)
+            new_cache[f"slot{s}"] = c2
+        return x, new_cache
+
+    if unroll:
+        caches = []
+        for i in range(n_periods):
+            sl = jax.tree.map(lambda a: a[i], (cparams["blocks"], cache))
+            x, c2 = period_body(x, sl)
+            caches.append(c2)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    else:
+        x, new_cache = lax.scan(period_body, x, (cparams["blocks"], cache))
+    x = rmsnorm(x, cparams["final_ln"], cfg.norm_eps)
+    head = lm_head_weight(cfg, cparams)
+    logits = (x[:, -1] @ head).astype(jnp.float32)
+    if dist is not None:
+        logits = dist.constraint(logits, dist.batch_axes, dist.model_axis)
+    return logits, new_cache
+
+
 def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: Array,
                 pos, *, dist: Optional[DistCtx] = None,
                 moe_mode: str = "ll", unroll: bool = False) -> tuple[Array, dict]:

@@ -1,0 +1,28 @@
+"""EP-native continuous-batching serving engine (DESIGN.md §18).
+
+The inference-side counterpart of the PR 8 training-step pipeline: a request
+queue with seeded arrival-process simulation (Poisson / bursty offered-load
+curves standing in for production traffic), a block-allocated paged KV cache
+(:class:`KVBlockPool`), a continuous-batching scheduler with prefill/decode
+disaggregation (chunked prefill interleaved with decode steps under a token
+budget and cache pressure), and a model step whose MoE layers dispatch
+through a persistent EP session (``SimulatedRDMABackend(session_layers=)``)
+per microbatch on the deterministic event clock.
+
+Everything here is host-side and seeded: two engines with the same config
+and workload produce bit-identical counters, latencies and outputs — the
+property the exact-equality ``fig13_serving/counters/*`` benchmark rows and
+the CI serving smoke gate on.
+"""
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.kv_cache import KVBlockPool
+from repro.serving.scheduler import (Microbatch, SchedulerConfig, Scheduler,
+                                     SeqState, Slice)
+from repro.serving.workload import (Request, bursty_arrivals, load_curve_arrivals,
+                                    poisson_arrivals)
+
+__all__ = [
+    "EngineConfig", "ServingEngine", "KVBlockPool", "Microbatch",
+    "SchedulerConfig", "Scheduler", "SeqState", "Slice", "Request",
+    "bursty_arrivals", "load_curve_arrivals", "poisson_arrivals",
+]

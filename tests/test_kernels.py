@@ -332,3 +332,75 @@ def test_decode_attention(b, h, hkv, d, s, pos):
     ref = (part.o / l[..., None])[:, 0]
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (serving, ISSUE 10)
+# ---------------------------------------------------------------------------
+def _paged_problem(seed, b, h, hkv, d, bs, nb_pool, nb_seq, pos):
+    """Random pools + per-sequence block tables whose live prefix points at
+    scattered physical blocks; dead tail entries are -1."""
+    from repro.kernels.decode_attention import decode_attention_paged_ref
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((nb_pool, bs, hkv, d)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((nb_pool, bs, hkv, d)), jnp.float32)
+    bt = np.full((b, nb_seq), -1, np.int32)
+    posv = np.asarray(pos, np.int32)
+    for i in range(b):
+        live = posv[i] // bs + 1
+        bt[i, :live] = rng.choice(nb_pool, size=live, replace=False)
+    ref = decode_attention_paged_ref(q, kp, vp, jnp.asarray(bt),
+                                     jnp.asarray(posv))
+    return q, kp, vp, jnp.asarray(bt), jnp.asarray(posv), ref
+
+
+@pytest.mark.parametrize("b,h,hkv,d,bs,pos", [
+    (2, 4, 2, 32, 8, (19, 5)),        # GQA rep=2, scattered blocks
+    (3, 6, 2, 32, 8, (7, 8, 23)),     # pos ON and just past a block edge
+    (1, 9, 3, 32, 16, (0,)),          # rep=3, single live token
+])
+def test_decode_attention_paged_vs_ref(b, h, hkv, d, bs, pos):
+    """Paged flash decoding == gather-then-mask oracle, including dead (-1)
+    table entries and positions on block boundaries."""
+    from repro.kernels.decode_attention import decode_attention_paged
+    q, kp, vp, bt, posv, ref = _paged_problem(0, b, h, hkv, d, bs, 32,
+                                              4, pos)
+    got = decode_attention_paged(q, kp, vp, bt, posv, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_paged_matches_contiguous():
+    """With an identity block table the paged kernel must reproduce the
+    contiguous decode kernel bit-for-bit on the same (gathered) cache."""
+    from repro.kernels.decode_attention import (decode_attention_paged,
+                                                decode_attention_pallas)
+    b, h, hkv, d, bs, nb = 2, 4, 2, 32, 8, 4
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((b * nb, bs, hkv, d)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((b * nb, bs, hkv, d)), jnp.float32)
+    bt = jnp.arange(b * nb, dtype=jnp.int32).reshape(b, nb)
+    pos = jnp.asarray([bs * nb - 1, bs + 2], jnp.int32)
+    paged = decode_attention_paged(q, kp, vp, bt, pos, interpret=True)
+    kc = kp.reshape(b, nb * bs, hkv, d)
+    vc = vp.reshape(b, nb * bs, hkv, d)
+    for i in range(b):   # contiguous kernel takes one scalar pos at a time
+        cont = decode_attention_pallas(q[i:i + 1], kc[i:i + 1], vc[i:i + 1],
+                                       int(pos[i]), bk=bs, interpret=True)
+        assert jnp.array_equal(paged[i], cont[0]), f"seq {i} diverged"
+
+
+def test_decode_attention_paged_ignores_dead_blocks():
+    """Whatever garbage the -1 (clamped-to-0) entries DMA in must not leak:
+    mutating unreferenced pool blocks cannot change the output."""
+    from repro.kernels.decode_attention import decode_attention_paged
+    q, kp, vp, bt, posv, _ = _paged_problem(2, 2, 4, 2, 32, 8, 16, 4, (9, 3))
+    out1 = decode_attention_paged(q, kp, vp, bt, posv, interpret=True)
+    live = np.unique(np.asarray(bt)[np.asarray(bt) >= 0])
+    dead = np.setdiff1d(np.arange(kp.shape[0]), live)
+    kp2 = kp.at[jnp.asarray(dead)].set(1e9)
+    vp2 = vp.at[jnp.asarray(dead)].set(-1e9)
+    out2 = decode_attention_paged(q, kp2, vp2, bt, posv, interpret=True)
+    assert jnp.array_equal(out1, out2)
